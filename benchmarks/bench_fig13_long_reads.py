@@ -1,0 +1,39 @@
+"""Paper Fig. 13: long-read (2k-10kbp) alignment throughput vs the ASIC
+baselines (ABSW fixed B=128 @12bit; GenASM). We reproduce:
+  * measured JAX throughput of our aligner at the adaptive band,
+  * the ABSW-style configuration (fixed B=128) on the SAME engine — the
+    paper's argument that adaptive narrow bands beat fixed-128,
+  * projected RAPIDx chip throughput from the PIM model.
+"""
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import MINIMAP2, banded_align_batch
+from repro.core.pim_model import RapidxChip
+from repro.core.scoring import adaptive_bandwidth
+from repro.data.genome import simulate_read_pairs
+
+
+def run():
+    chip = RapidxChip()
+    for L in (2048, 10_240):
+        NP = 4
+        q, r, n, m = simulate_read_pairs(NP, L, "pacbio", seed=61)
+        args = (jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
+                jnp.asarray(m))
+        B = adaptive_bandwidth(L, 30)
+        us_ad = time_fn(lambda: banded_align_batch(
+            *args, sc=MINIMAP2, band=B, adaptive=True,
+            collect_tb=False)["score"], iters=2)
+        emit(f"fig13/jax_adaptive/L{L}", us_ad / NP,
+             f"reads_per_s={NP / (us_ad / 1e6):.3g};B={B}")
+        us_absw = time_fn(lambda: banded_align_batch(
+            *args, sc=MINIMAP2, band=128, adaptive=False,
+            collect_tb=False)["score"], iters=2)
+        emit(f"fig13/absw_style_fixed128/L{L}", us_absw / NP,
+             f"reads_per_s={NP / (us_absw / 1e6):.3g};"
+             f"adaptive_speedup={us_absw / us_ad:.2f}x")
+        proj = chip.reads_per_second(L, B)
+        emit(f"fig13/rapidx_projected/L{L}", 1e6 / proj,
+             f"reads_per_s={proj:.4g};paper=1.8-2.9x_over_asic")

@@ -1,0 +1,33 @@
+"""Paper Fig. 14: edit-distance throughput with / without traceback
+(RAPIDx vs Edlib; 141-321x with TB, 56-149x without). We reproduce the
+reconfigurable-precision mode (3-bit scoring config on the same engine)
+and the with/without-traceback throughput split.
+"""
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import EDIT_DISTANCE
+from repro.core.banded import banded_align_batch
+from repro.core.pim_model import RAPIDX_EDIT_BITS, RapidxChip
+from repro.core.scoring import adaptive_bandwidth
+from repro.data.genome import simulate_read_pairs
+
+
+def run():
+    chip = RapidxChip()
+    for L, NP in ((100, 64), (1024, 16), (10_240, 2)):
+        q, r, n, m = simulate_read_pairs(NP, L, "illumina", seed=71)
+        args = (jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
+                jnp.asarray(m))
+        B = adaptive_bandwidth(L, 10)
+        for tb in (False, True):
+            us = time_fn(lambda: banded_align_batch(
+                *args, sc=EDIT_DISTANCE, band=B, adaptive=True,
+                collect_tb=tb)["score"], iters=2)
+            emit(f"fig14/jax/L{L}/{'tb' if tb else 'no_tb'}", us / NP,
+                 f"pairs_per_s={NP / (us / 1e6):.3g};B={B}")
+        proj = chip.reads_per_second(L, B, bits=RAPIDX_EDIT_BITS,
+                                     traceback=True)
+        emit(f"fig14/rapidx_projected/L{L}", 1e6 / proj,
+             f"pairs_per_s={proj:.4g};bits=3")

@@ -1,0 +1,42 @@
+"""Paper Figs. 9 & 10: design-space exploration.
+
+Fig. 9 — sequence-level parallelism k vs number of TBMs per tile:
+  k <= min(floor(1024/B), floor(1024^2 t / (2 m B)))  (paper §VI-C2)
+Reproduced analytically from the cost model (the paper's own method).
+
+Fig. 10 — column width of the peripheral circuits (16..256): on TPU the
+analogous knob is the kernel's band/lane occupancy and the wavefront
+chunk; we sweep the Pallas kernel's batch_tile x band tiling in interpret
+mode and report relative throughput (structural sweep; absolute numbers
+are CPU-interpret).
+"""
+
+from benchmarks.common import emit, time_fn
+from repro.core import MINIMAP2
+from repro.core.pim_model import RapidxChip
+from repro.data.genome import simulate_read_pairs
+from repro.kernels.banded_dp.ops import banded_align_kernel_batch
+
+
+def run():
+    chip = RapidxChip()
+    # Fig. 9: k vs t for several read lengths (paper plots 2k..10kbp).
+    for L in (2048, 4096, 8192, 10_240):
+        ks = []
+        for t in (1, 3, 7, 11, 15):
+            chip_t = RapidxChip(tbms_per_tile=t)
+            ks.append(chip_t.max_segments(100, L))
+        emit(f"fig9/k_vs_tbms/L{L}", 0.0,
+             "k_at_t1_3_7_11_15=" + "/".join(map(str, ks)))
+
+    # Fig. 10: block-shape sweep on the wavefront kernel.
+    L, NP = 256, 16
+    q, r, n, m = simulate_read_pairs(NP, L, "illumina", seed=81)
+    base = None
+    for bt, band in ((2, 16), (4, 16), (8, 16), (4, 32), (8, 32), (8, 64)):
+        us = time_fn(lambda: banded_align_kernel_batch(
+            q, r, n, m, sc=MINIMAP2, band=band, batch_tile=bt,
+            chunk=64)["score"], warmup=1, iters=2)
+        base = base or us
+        emit(f"fig10/block_bt{bt}_B{band}", us / NP,
+             f"rel_throughput={base / us:.2f};lanes={bt * band}")

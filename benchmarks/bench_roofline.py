@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json, applies the analytic per-cell cost model
+(roofline/analytic.py — the compiled cost_analysis undercounts lax.scan
+bodies, see EXPERIMENTS.md §Dry-run note) and emits one row per cell.
+"""
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.roofline.analytic import analytic_roofline
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        emit("roofline/no_dryrun_results", 0.0, "run repro.launch.dryrun")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        if rec.get("skipped") or rec.get("status") != "ok":
+            continue
+        if rec["mesh"] != "single":  # roofline table is single-pod
+            continue
+        try:
+            a = analytic_roofline(rec)
+        except Exception as e:
+            emit(f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+                 f"error={type(e).__name__}")
+            continue
+        extra = (f"pairs_per_s_bound={a['pairs_per_s_per_chip_bound']:.3g}"
+                 if "pairs_per_s_per_chip_bound" in a
+                 else f"mfu_bound={a.get('mfu_bound', 0):.3f}")
+        emit(f"roofline/{rec['arch']}/{rec['shape']}",
+             a["step_time_overlap_s"] * 1e6,
+             f"dominant={a['dominant']};compute_s={a['compute_s']:.2e};"
+             f"memory_s={a['memory_s']:.2e};"
+             f"collective_s={a['collective_s']:.2e};{extra}")

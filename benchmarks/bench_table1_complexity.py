@@ -1,0 +1,40 @@
+"""Paper Table I: complexity / critical path of the three DP algorithms.
+
+  Full DP                          O(mn) compute, O(mn) memory, 5x32bit
+  Banded difference-based DP       O(mB),          O(mB),       8x5bit
+  Adaptive banded parallelized DP  O(mB),          O(mB),       4x5bit
+
+We report measured cell-update throughput of (a) the exact full DP oracle
+and (b) the adaptive banded parallelized wavefront, plus the analytic
+complexity/critical-path columns (op-level, from core.pim_model).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import MINIMAP2, banded_align_batch, full_dp_matrices
+from repro.core.scoring import adaptive_bandwidth
+from repro.data.genome import simulate_read_pairs
+
+
+def run():
+    L, NP = 1024, 8
+    q, r, n, m = simulate_read_pairs(NP, L, "pacbio", seed=21)
+    B = adaptive_bandwidth(L, 30)
+
+    us_full = time_fn(lambda: [full_dp_matrices(q[i][:n[i]], r[i][:m[i]],
+                                                MINIMAP2)
+                               for i in range(NP)], warmup=0, iters=2)
+    cells_full = float(np.sum((n + 1.0) * (m + 1.0)))
+    emit("table1/full_dp", us_full / NP,
+         f"cells_per_s={cells_full / (us_full / 1e6):.3g};critical=5x32bit")
+
+    args = (jnp.asarray(q), jnp.asarray(r), jnp.asarray(n), jnp.asarray(m))
+    us_band = time_fn(lambda: banded_align_batch(
+        *args, sc=MINIMAP2, band=B, adaptive=True, collect_tb=False)["score"])
+    cells_band = float(np.sum((n + m).astype(np.float64) * B))
+    emit("table1/adaptive_banded_parallel", us_band / NP,
+         f"cells_per_s={cells_band / (us_band / 1e6):.3g};B={B};"
+         f"critical=4x5bit;complexity_reduction="
+         f"{cells_full / cells_band:.1f}x")

@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall time per call in microseconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def header():
+    print("name,us_per_call,derived")

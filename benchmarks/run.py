@@ -1,0 +1,59 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  table1   — DP algorithm complexity/critical path   (paper Table I)
+  table5   — banded accuracy vs w x adaptive ablation (paper Table V)
+  fig9/10  — design-space exploration                 (paper Figs. 9-10)
+  fig11    — RAPID vs RAPIDx PIM cost model           (paper Fig. 11)
+  fig12    — short-read throughput                    (paper Fig. 12)
+  fig13    — long-read throughput vs ASIC style       (paper Fig. 13)
+  fig14    — edit distance w/ and w/o traceback       (paper Fig. 14)
+  roofline — per-cell roofline terms from the dry-run (EXPERIMENTS §Roofline)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only substr]
+"""
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_fig9_fig10_dse, bench_fig11_pim_model,
+                        bench_fig12_short_reads, bench_fig13_long_reads,
+                        bench_fig14_edit_distance, bench_roofline,
+                        bench_table1_complexity, bench_table5_accuracy)
+from benchmarks.common import header
+
+MODULES = [
+    ("table1", bench_table1_complexity),
+    ("table5", bench_table5_accuracy),
+    ("fig9_10", bench_fig9_fig10_dse),
+    ("fig11", bench_fig11_pim_model),
+    ("fig12", bench_fig12_short_reads),
+    ("fig13", bench_fig13_long_reads),
+    ("fig14", bench_fig14_edit_distance),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    header()
+    failed = []
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod.run()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED benchmarks: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: align two DNA sequences with the RAPIDx adaptive banded
+parallelized DP and print the alignment.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (MINIMAP2, banded_align, cigar_score, decode, encode,
+                        full_dp_score, traceback_banded)
+from repro.core.scoring import adaptive_bandwidth
+
+
+def pretty(q, r, cigar):
+    top, mid, bot = [], [], []
+    i = j = 0
+    for op, ln in cigar:
+        for _ in range(ln):
+            if op == "M":
+                top.append("ACGTN"[q[i]])
+                bot.append("ACGTN"[r[j]])
+                mid.append("|" if q[i] == r[j] else "x")
+                i += 1
+                j += 1
+            elif op == "I":
+                top.append("ACGTN"[q[i]])
+                bot.append("-")
+                mid.append(" ")
+                i += 1
+            else:
+                top.append("-")
+                bot.append("ACGTN"[r[j]])
+                mid.append(" ")
+                j += 1
+    return "\n".join("".join(x) for x in (top, mid, bot))
+
+
+def main():
+    reference = encode("ACGTCCGGTTAACGGAGTCCAGTTACGGTTAACCTGA")
+    query = encode("ACGTCCGGTTACGGAGTCAAGTTACGGTTTTAACCTGA")
+
+    band = adaptive_bandwidth(max(len(query), len(reference)), 10)
+    out = banded_align(jnp.asarray(query), jnp.asarray(reference),
+                       len(query), len(reference),
+                       sc=MINIMAP2, band=band)
+    score = int(out["score"])
+    cigar = traceback_banded(np.asarray(out["tb"]), np.asarray(out["los"]),
+                             len(query), len(reference), band)
+
+    print(f"query     : {decode(query)}")
+    print(f"reference : {decode(reference)}")
+    print(f"band B    : {band} (adaptive: B = min(w + 0.01L, 100))")
+    print(f"score     : {score} (full-DP oracle: "
+          f"{full_dp_score(query, reference, MINIMAP2)})")
+    print(f"CIGAR     : " + "".join(f"{l}{op}" for op, l in cigar))
+    assert cigar_score(cigar, query, reference, MINIMAP2) == score
+    print()
+    print(pretty(query, reference, cigar))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (CheckpointManager, latest_step,
+                                         restore, save)

@@ -1,0 +1,3 @@
+from repro.configs.base import (ArchConfig, ShapeSpec, SHAPES, REGISTRY,
+                                get_config, list_archs, register)
+import repro.configs.archs  # noqa: F401  (populates REGISTRY)

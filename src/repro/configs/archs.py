@@ -1,0 +1,6 @@
+"""Imports every architecture config module, populating the registry."""
+
+from repro.configs import (gemma3_27b, mixtral_8x22b, musicgen_medium,  # noqa
+                           paligemma_3b, qwen2_5_14b, qwen2_moe_a2_7b,
+                           qwen3_0_6b, recurrentgemma_9b, stablelm_3b,
+                           xlstm_125m)

@@ -1,0 +1,31 @@
+"""gemma3-27b [dense] — 5:1 local:global interleaving, 128k context.
+
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144
+[hf:google/gemma-3 family; unverified]. Pattern: 5 sliding-window layers
+(W=1024) then 1 global layer; head_dim=128; GeGLU; sqrt(d) embed scale.
+long_500k RUNS: 5/6 of layers have ring-buffer caches; the ~10 global
+layers hold a data-axis-sharded 500k cache (DESIGN.md §Arch-applicability).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    pattern=("local", "local", "local", "local", "local", "attn"),
+    window=1024,
+    mlp_kind="geglu",
+    rope_theta=1_000_000.0,
+    embed_scale=True,
+    qk_norm=True,
+    tie_embeddings=True,
+    subquadratic=True,
+    source="hf:google/gemma-3-27b-pt geometry; 5:1 local:global",
+))

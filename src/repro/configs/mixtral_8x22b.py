@@ -1,0 +1,31 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, sliding-window attention.
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768, MoE 8e top-2
+[arXiv:2401.04088; hf]. SWA window 4096 per the assignment note -> the KV
+cache is bounded and long_500k RUNS. Renormalised top-2 gates.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,          # == expert width (all FFNs are expert FFNs)
+    vocab_size=32768,
+    pattern=("moe_swa",),
+    window=4096,
+    mlp_kind="swiglu",
+    rope_theta=1_000_000.0,
+    moe_num_experts=8,
+    moe_top_k=2,
+    moe_d_ff=16384,
+    moe_renormalize=True,
+    tie_embeddings=False,
+    subquadratic=True,
+    source="arXiv:2401.04088 (Mixtral), 8x22B geometry + SWA",
+))

@@ -1,0 +1,29 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (kv=24) d_ff=6144 vocab=2048 [arXiv:2306.05284; hf].
+The EnCodec frontend is a STUB per the brief: input_specs() provides
+precomputed frame embeddings (B, T, d). GELU MLP, full attention,
+sinusoidal->RoPE simplification noted in DESIGN.md.
+long_500k skipped (full attention).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    pattern=("attn",),
+    mlp_kind="gelu",
+    rope_theta=10000.0,
+    input_mode="embeds",
+    tie_embeddings=False,
+    subquadratic=False,
+    source="arXiv:2306.05284 (MusicGen medium)",
+))

@@ -1,0 +1,31 @@
+"""paligemma-3b [vlm] — SigLIP frontend stub + gemma decoder backbone.
+
+18L d_model=2048 8H (GQA kv=1) d_ff=16384 vocab=257216
+[arXiv:2407.07726; hf]. The SigLIP vision tower is a STUB per the brief:
+input_specs() provides 256 precomputed patch embeddings prefixed to the
+token stream. Gemma-style: GeGLU MLP, sqrt(d) embedding scale, tied
+embeddings, full attention (no banding -> long_500k skipped).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    pattern=("attn",),
+    mlp_kind="geglu",
+    rope_theta=10000.0,
+    embed_scale=True,
+    tie_embeddings=True,
+    input_mode="patch_prefix",
+    num_prefix=256,
+    subquadratic=False,
+    source="arXiv:2407.07726 (PaliGemma); gemma-2b backbone geometry",
+))

@@ -1,0 +1,27 @@
+"""qwen2.5-14b [dense] — GQA with QKV bias.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=13824 vocab=152064
+[hf:Qwen/Qwen2.5 family; hf]. SwiGLU, RoPE theta 1e6, untied head.
+Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=13824,
+    vocab_size=152064,
+    pattern=("attn",),
+    mlp_kind="swiglu",
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    tie_embeddings=False,
+    subquadratic=False,
+    source="hf:Qwen/Qwen2.5-14B",
+))

@@ -1,0 +1,33 @@
+"""qwen2-moe-a2.7b [moe] — 60 routed experts top-4 + shared expert.
+
+24L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=151936, MoE 60e top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]. The "4 shared" experts are fused as one
+4x-width (5632) sigmoid-gated shared MLP, as in the HF reference. Top-4
+gates NOT renormalised. Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=151936,
+    pattern=("moe",),
+    mlp_kind="swiglu",
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    moe_num_experts=60,
+    moe_top_k=4,
+    moe_d_ff=1408,
+    moe_shared_d_ff=5632,
+    moe_renormalize=False,
+    tie_embeddings=False,
+    subquadratic=False,
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+))

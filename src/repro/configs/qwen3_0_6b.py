@@ -1,0 +1,28 @@
+"""qwen3-0.6b [dense] — qk-norm GQA; head_dim decoupled from d_model.
+
+28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936
+[hf:Qwen/Qwen3 family; hf]. head_dim=128 (> d_model/n_heads — exercises
+the decoupled-projection path), qk_norm, SwiGLU, tied embeddings.
+Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab_size=151936,
+    pattern=("attn",),
+    mlp_kind="swiglu",
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    tie_embeddings=True,
+    subquadratic=False,
+    source="hf:Qwen/Qwen3-0.6B",
+))

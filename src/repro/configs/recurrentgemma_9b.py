@@ -1,0 +1,29 @@
+"""recurrentgemma-9b [hybrid] — Griffin: RG-LRU + local attention, 1:2.
+
+38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000
+[arXiv:2402.19427; unverified]. Pattern: (rglru, rglru, local) — two
+recurrent blocks per local-attention block (W=2048), head_dim=256, GeGLU.
+Bounded decode state (RG-LRU h + ring buffers) -> long_500k RUNS.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    pattern=("rglru", "rglru", "local"),
+    window=2048,
+    mlp_kind="geglu",
+    rope_theta=10000.0,
+    embed_scale=True,
+    tie_embeddings=True,
+    subquadratic=True,
+    source="arXiv:2402.19427 (Griffin/RecurrentGemma-9B)",
+))

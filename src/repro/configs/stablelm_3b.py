@@ -1,0 +1,26 @@
+"""stablelm-3b [dense] — MHA (kv == heads).
+
+32L d_model=2560 32H (GQA kv=32) d_ff=6912 vocab=50304
+[hf:stabilityai/stablelm family; unverified]. SwiGLU, RoPE 10k.
+Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="stablelm-3b",
+    family="dense",
+    n_layers=32,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=50304,
+    pattern=("attn",),
+    mlp_kind="swiglu",
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    subquadratic=False,
+    source="hf:stabilityai/stablelm-3b-4e1t geometry",
+))

@@ -1,0 +1,25 @@
+"""xlstm-125m [ssm] — alternating mLSTM / sLSTM blocks, no FFN.
+
+12L d_model=768 4H d_ff=0 vocab=50304 [arXiv:2405.04517; unverified].
+Matrix-memory mLSTM (chunkwise-parallel) + scalar sLSTM (true recurrence).
+O(1) decode state -> long_500k RUNS.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab_size=50304,
+    pattern=("mlstm", "slstm"),
+    mlp_kind="gelu",
+    tie_embeddings=True,
+    subquadratic=True,
+    source="arXiv:2405.04517 (xLSTM 125M class)",
+))

@@ -1,0 +1,15 @@
+"""RAPIDx core: the paper's alignment algorithms and cost models."""
+
+from repro.core.scoring import (BWA_MEM, CONSTANT_GAP, EDIT_DISTANCE,
+                                LINEAR_GAP, MINIMAP2, PRESETS, ScoringConfig,
+                                adaptive_bandwidth, decode, encode)
+from repro.core.full_dp import (FullDPResult, cigar_score, full_dp_align,
+                                full_dp_matrices, full_dp_score,
+                                traceback_full)
+from repro.core.diff_dp import DiffDPResult, diff_dp, range_report, serial_eq2
+from repro.core.banded import (banded_align, banded_align_batch,
+                               traceback_banded)
+from repro.core.batch import AlignmentBatch, BucketSpec, align_batch, make_bucket
+from repro.core.edit_distance import (edit_distance, edit_distance_batch,
+                                      levenshtein_reference)
+from repro.core import pim_model

@@ -1,0 +1,362 @@
+"""Adaptive banded parallelized DP alignment (paper §IV-B) — JAX reference.
+
+This is the paper's core algorithm as a `lax.scan` over wavefront steps:
+
+  * One scan step == one wavefront move (paper Fig. 4(c) / Fig. 6(c)): the
+    band of B anti-diagonal cells advances one step right or down; total
+    trip count is n + m ("the required number of iterations equals the sum
+    of the two sequences' lengths", §VI-F).
+  * The B band lanes update simultaneously — wavefront-level parallelism.
+  * Within a step, all four shifted difference quantities (u'=dH', v'=dV',
+    x'=dE', y'=dF') update in parallel from the shared intermediate A' and
+    previous-step values only — alignment-matrix-level parallelism
+    (paper Eq. (4); derivation in `core.diff_dp`).
+  * The wavefront direction is adaptive (§IV-B2): if the H value of the
+    rightmost band cell (lane 0 = smallest i = largest j) exceeds the
+    leftmost (lane B-1), the band moves right, else down. Hard feasibility
+    clamps guarantee the global-alignment corner (n, m) stays reachable.
+  * Traceback flags (4 bits: 2-bit direction + E-extend + F-extend, paper
+    §V-C3 "4-bit flags") stream out per step — the TBM analogue.
+
+Band geometry: the grid is (n+1) x (m+1) with boundary row/col 0. On
+anti-diagonal t the band covers rows i in [lo_t, lo_t + B); cell k is
+(i, j) = (lo_t + k, t - lo_t - k). A down-move increments lo. Neighbor
+alignment after a move is a +/-1 lane shift — the paper's peripheral
+*shifter* circuit, realised here as a lane-select.
+
+Batching (sequence-level parallelism, paper Fig. 6(b)) is `jax.vmap`;
+tile-level parallelism (Fig. 6(a)) is `shard_map` in `core.distributed`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scoring import ScoringConfig
+
+NEG = jnp.int32(-(1 << 28))
+DEAD_THRESHOLD = -(1 << 27)
+
+
+class BandState(NamedTuple):
+    lo: jnp.ndarray        # int32 — top row of the band on the current diag
+    u: jnp.ndarray         # (B,) int32 — dH' (shifted)
+    v: jnp.ndarray         # (B,) int32 — dV'
+    x: jnp.ndarray         # (B,) int32 — dE' (combined term)
+    y: jnp.ndarray         # (B,) int32 — dF'
+    H: jnp.ndarray         # (B,) int32 — absolute scores along the band
+    score: jnp.ndarray     # int32 — captured at t == n + m
+    final_lo: jnp.ndarray  # int32 — lo at the final diagonal
+    best: jnp.ndarray      # int32 — max H over all visited cells
+    best_i: jnp.ndarray    # int32 — its coordinates (extension/local mode:
+    best_j: jnp.ndarray    # "traceback starts from the max cell", §III-A2)
+
+
+def _shift_down(a, fill):
+    """result[k] = a[k-1]; result[0] = fill."""
+    return jnp.concatenate([jnp.full((1,), fill, a.dtype), a[:-1]])
+
+
+def _shift_up(a, fill):
+    """result[k] = a[k+1]; result[B-1] = fill."""
+    return jnp.concatenate([a[1:], jnp.full((1,), fill, a.dtype)])
+
+
+def _init_state(band: int, mode: str = "global") -> BandState:
+    """Diagonal t=0: only cell (0,0) is alive, with H=0 and zero deltas."""
+    z = jnp.zeros((band,), jnp.int32)
+    H = jnp.full((band,), NEG, jnp.int32).at[0].set(0)
+    best0 = jnp.int32(NEG if mode == "semiglobal" else 0)
+    return BandState(lo=jnp.int32(0), u=z, v=z, x=z, y=z, H=H,
+                     score=jnp.int32(NEG), final_lo=jnp.int32(0),
+                     best=best0, best_i=jnp.int32(0),
+                     best_j=jnp.int32(0))
+
+
+def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
+          mode: str, q_pad, r_pad, n, m, state: BandState, t):
+    """One wavefront move: decide direction, advance band, update Eq. (4)."""
+    o, e = sc.gap_open, sc.gap_extend
+    oe = jnp.int32(o + e)
+    shift = jnp.int32(2 * (o + e))
+    B = band
+
+    # ---- 1. Wavefront direction (paper §IV-B2 + feasibility clamps) ----
+    lo = state.lo
+    # Corner reachability: if we go right now, lo can still grow by at most
+    # (n + m - t); the final diagonal must satisfy lo_final >= n - B + 1.
+    must_down = (lo + (n + m - t)) < (n - B + 1)
+    must_right = lo >= n
+    if adaptive:
+        # Rightmost band cell = lane 0 (largest j); leftmost = lane B-1.
+        heur_right = state.H[0] > state.H[B - 1]
+    else:
+        # Fixed direction: steer the band centre toward the main diagonal
+        # (the pre-defined scheme of Fig. 4(b), used by the Table V "No"
+        # rows). Move down when centre row < t * n / (n + m).
+        heur_right = (2 * lo + B) * (n + m) >= 2 * t * n
+    go_down = jnp.where(must_down, True, jnp.where(must_right, False,
+                                                   ~heur_right))
+    lo_new = lo + go_down.astype(jnp.int32)
+
+    # ---- 2. Align previous-diagonal neighbours to the new band ----
+    # down: up[k] = prev[k],   left[k] = prev[k+1]
+    # right: up[k] = prev[k-1], left[k] = prev[k]
+    def pick_up(a, fill):
+        return jnp.where(go_down, a, _shift_down(a, fill))
+
+    def pick_left(a, fill):
+        return jnp.where(go_down, _shift_up(a, fill), a)
+
+    up_H = pick_up(state.H, NEG)
+    up_x = pick_up(state.x, jnp.int32(0))
+    up_v = pick_up(state.v, jnp.int32(0))
+    left_H = pick_left(state.H, NEG)
+    left_y = pick_left(state.y, jnp.int32(0))
+    left_u = pick_left(state.u, jnp.int32(0))
+
+    up_valid = up_H > DEAD_THRESHOLD
+    left_valid = left_H > DEAD_THRESHOLD
+
+    # ---- 3. Cell coordinates, masks, substitution scores ----
+    k = jnp.arange(B, dtype=jnp.int32)
+    i_vec = lo_new + k
+    j_vec = t - i_vec
+    valid = (i_vec >= 0) & (i_vec <= n) & (j_vec >= 0) & (j_vec <= m)
+    interior = valid & (i_vec >= 1) & (j_vec >= 1)
+    brow = valid & (i_vec == 0) & (j_vec >= 1)   # boundary row 0
+    bcol = valid & (j_vec == 0) & (i_vec >= 1)   # boundary column 0
+
+    qb = q_pad[jnp.clip(i_vec - 1, 0, q_pad.shape[0] - 1)]
+    rb = r_pad[jnp.clip(j_vec - 1, 0, r_pad.shape[0] - 1)]
+    is_match = (qb == rb) & (qb < 4) & (rb < 4)
+    s = jnp.where(is_match, jnp.int32(sc.match),
+                  jnp.int32(-sc.mismatch))
+
+    # ---- 4. Parallelized shifted update (Eq. (4)) ----
+    x_arm = jnp.where(up_valid, up_x, NEG)
+    y_arm = jnp.where(left_valid, left_y, NEG)
+    v_up = jnp.where(up_valid, up_v, oe)      # neutral: pretend dV_up = 0
+    u_left = jnp.where(left_valid, left_u, oe)
+    diag_valid = up_valid | left_valid
+    s_arm = jnp.where(diag_valid, s + shift, NEG)
+
+    a_new = jnp.maximum(jnp.maximum(s_arm, x_arm), y_arm)
+    u_new = a_new - v_up
+    v_new = a_new - u_left
+    x_new = jnp.maximum(a_new, x_arm + o) - u_left
+    y_new = jnp.maximum(a_new, y_arm + o) - v_up
+
+    H_new = jnp.where(up_valid, up_H + u_new - oe,
+                      jnp.where(left_valid, left_H + v_new - oe, NEG))
+
+    # ---- 5. Traceback flags (paper Eq. (5), 4-bit) ----
+    if collect_tb:
+        direction = jnp.where(a_new == s_arm, 0,
+                              jnp.where(a_new == x_arm, 1, 2))
+        ext_e = (x_arm + o) > a_new
+        ext_f = (y_arm + o) > a_new
+        code = (direction + 4 * ext_e.astype(jnp.int32)
+                + 8 * ext_f.astype(jnp.int32)).astype(jnp.uint8)
+        code = jnp.where(interior, code, jnp.uint8(0))
+    else:
+        code = None
+
+    # ---- 6. Boundary overrides (constants derived in core.diff_dp) ----
+    ob = jnp.int32(o)
+    if mode == "semiglobal":
+        # Free leading reference gap: H(0,j) = 0 for all j, so
+        # dV(0,j) = 0 -> v' = o+e; dE(0,j) = -(o+e) -> x' = o+e.
+        v_new = jnp.where(brow, oe, v_new)
+        x_new = jnp.where(brow, oe, x_new)
+    else:
+        v_new = jnp.where(brow, jnp.where(j_vec == 1, 0, ob), v_new)
+        x_new = jnp.where(brow, jnp.where(j_vec == 1, 0, ob), x_new)
+    u_new = jnp.where(brow, ob, u_new)
+    y_new = jnp.where(brow, ob, y_new)
+    u_new = jnp.where(bcol, jnp.where(i_vec == 1, 0, ob), u_new)
+    y_new = jnp.where(bcol, jnp.where(i_vec == 1, 0, ob), y_new)
+    v_new = jnp.where(bcol, ob, v_new)
+    x_new = jnp.where(bcol, ob, x_new)
+    H_new = jnp.where(brow,
+                      jnp.int32(0) if mode == "semiglobal"
+                      else -(o + j_vec * e), H_new)
+    H_new = jnp.where(bcol, -(o + i_vec * e), H_new)
+
+    # Dead cells.
+    H_new = jnp.where(valid, H_new, NEG)
+    u_new = jnp.where(valid, u_new, 0)
+    v_new = jnp.where(valid, v_new, 0)
+    x_new = jnp.where(valid, x_new, 0)
+    y_new = jnp.where(valid, y_new, 0)
+
+    # ---- 7. Score capture at the global-alignment corner ----
+    done = t == (n + m)
+    k_corner = jnp.clip(n - lo_new, 0, B - 1)
+    score = jnp.where(done, H_new[k_corner], state.score)
+    final_lo = jnp.where(done, lo_new, state.final_lo)
+
+    # Extension / local-max tracking (paper §III-A2: local traceback
+    # starts from the max-score cell). Only interior cells compete —
+    # in semiglobal mode only cells on the last read row (free trailing
+    # reference gap: the alignment may end at any window column).
+    elig = interior & (t <= n + m)
+    if mode == "semiglobal":
+        elig = elig & (i_vec == n)
+    H_masked = jnp.where(elig, H_new, NEG)
+    k_best = jnp.argmax(H_masked)
+    cand = H_masked[k_best]
+    better = cand > state.best
+    best = jnp.where(better, cand, state.best)
+    best_i = jnp.where(better, i_vec[k_best], state.best_i)
+    best_j = jnp.where(better, j_vec[k_best], state.best_j)
+
+    # Freeze the carry once past the final diagonal (vmap with ragged
+    # lengths runs extra steps for shorter pairs).
+    active = t <= (n + m)
+
+    def keep(new, old):
+        return jnp.where(active, new, old)
+
+    new_state = BandState(
+        lo=keep(lo_new, state.lo), u=keep(u_new, state.u),
+        v=keep(v_new, state.v), x=keep(x_new, state.x),
+        y=keep(y_new, state.y), H=keep(H_new, state.H),
+        score=score, final_lo=final_lo,
+        best=best, best_i=best_i, best_j=best_j)
+    ys = (code, keep(lo_new, state.lo)) if collect_tb else keep(lo_new, state.lo)
+    return new_state, ys
+
+
+@functools.partial(jax.jit, static_argnames=("sc", "band", "adaptive",
+                                             "collect_tb", "mode"))
+def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
+                 adaptive: bool = True, collect_tb: bool = True,
+                 mode: str = "global"):
+    """Align one (query, reference) pair with the adaptive banded
+    parallelized DP.
+
+    Args:
+      q_pad: (n_pad,) int8/int32 encoded query (padded with 4).
+      r_pad: (m_pad,) encoded reference.
+      n, m: true lengths (traced scalars; enables ragged vmap batches).
+      sc: scoring config (static).
+      band: band width B (static).
+      adaptive: adaptive wavefront direction on/off (Table V ablation).
+      collect_tb: stream traceback flags (off = score-only, Fig. 14).
+
+    Returns a dict with 'score' (int32), and when collect_tb: 'tb'
+    ((T, B) uint8 flags) and 'los' ((T+1,) int32 band offsets, los[0]=0).
+    """
+    q_pad = q_pad.astype(jnp.int32)
+    r_pad = r_pad.astype(jnp.int32)
+    T = q_pad.shape[0] + r_pad.shape[0]
+    n = jnp.asarray(n, jnp.int32)
+    m = jnp.asarray(m, jnp.int32)
+
+    step = functools.partial(_step, sc, band, adaptive, collect_tb, mode,
+                             q_pad, r_pad, n, m)
+    state, ys = jax.lax.scan(step, _init_state(band, mode),
+                             jnp.arange(1, T + 1, dtype=jnp.int32))
+    out = {"score": state.score, "final_lo": state.final_lo,
+           "best_score": state.best, "best_i": state.best_i,
+           "best_j": state.best_j}
+    if collect_tb:
+        code, los = ys
+        out["tb"] = code
+        out["los"] = jnp.concatenate([jnp.zeros((1,), jnp.int32), los])
+    return out
+
+
+def banded_align_batch(q_batch, r_batch, n_batch, m_batch, *, sc, band,
+                       adaptive=True, collect_tb=True, mode="global"):
+    """Sequence-level parallelism: vmap over a padded batch."""
+    fn = functools.partial(banded_align, sc=sc, band=band,
+                           adaptive=adaptive, collect_tb=collect_tb,
+                           mode=mode)
+    return jax.vmap(fn)(q_batch, r_batch, n_batch, m_batch)
+
+
+# ---------------------------------------------------------------------------
+# Traceback decode (paper §V-C3) — host-side, mirroring the peripheral
+# traceback logic (the ReRAM array never walks the path; dedicated logic
+# does). Exact affine walk using the 4-bit flags.
+# ---------------------------------------------------------------------------
+
+def traceback_banded(tb: np.ndarray, los: np.ndarray, n: int, m: int,
+                     band: int) -> list[tuple[str, int]]:
+    """Decode the (T, B) flag plane into a CIGAR.
+
+    tb[t-1, k] holds the flags of cell (i, j) with i + j = t and
+    k = i - los[t]. Flags: bits 0-1 direction (0 diag / 1 E / 2 F),
+    bit 2 E-extend, bit 3 F-extend (the extend bit of cell (i,j) describes
+    the E/F value *entering* cell (i+1,j) / (i,j+1), per the Eq. (4)
+    regrouping).
+    """
+    tb = np.asarray(tb)
+    los = np.asarray(los)
+
+    def code(i, j):
+        t = i + j
+        k = i - int(los[t])
+        if t < 1 or k < 0 or k >= band:
+            return None  # path escaped the band: heuristic loss
+        return int(tb[t - 1, k])
+
+    ops: list[str] = []
+    i, j = n, m
+    state = "M"
+    while i > 0 or j > 0:
+        if i == 0:
+            ops.append("D")
+            j -= 1
+            continue
+        if j == 0:
+            ops.append("I")
+            i -= 1
+            continue
+        c = code(i, j)
+        if c is None:
+            # Escaped the band — fall back to a diagonal step (should not
+            # happen for paths the band actually scored).
+            ops.append("M")
+            i -= 1
+            j -= 1
+            continue
+        if state == "M":
+            d = c & 3
+            if d == 0:
+                ops.append("M")
+                i -= 1
+                j -= 1
+            elif d == 1:
+                state = "E"
+            else:
+                state = "F"
+        elif state == "E":
+            ops.append("I")
+            up = code(i - 1, j)
+            ext = bool(up & 4) if (up is not None and i - 1 >= 1 and j >= 1) else False
+            i -= 1
+            if not ext:
+                state = "M"
+        else:  # "F"
+            ops.append("D")
+            left = code(i, j - 1)
+            ext = bool(left & 8) if (left is not None and j - 1 >= 1 and i >= 1) else False
+            j -= 1
+            if not ext:
+                state = "M"
+    ops.reverse()
+    cigar: list[tuple[str, int]] = []
+    for op in ops:
+        if cigar and cigar[-1][0] == op:
+            cigar[-1] = (op, cigar[-1][1] + 1)
+        else:
+            cigar.append((op, 1))
+    return cigar

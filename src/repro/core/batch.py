@@ -1,0 +1,102 @@
+"""Batched alignment API — the host-side staging layer (paper Fig. 6(b)).
+
+The paper batches kt (segments x tiles) sequence pairs per dispatch; the
+host groups reads by length so each ReRAM segment's band width matches.
+Here: bucket by padded length, pick the adaptive band per bucket
+(B = min(w + 0.01 L, 100), §IV-B1), pad, and run the vmapped wavefront.
+Work is split into fixed-capacity "dispatch" groups so XLA compiles one
+program per (bucket shape, band) — mirroring the fixed CM geometry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import banded
+from repro.core.scoring import ScoringConfig, MINIMAP2, adaptive_bandwidth
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    q_len: int       # padded query length
+    r_len: int       # padded reference length
+    band: int        # band width used for the bucket
+    capacity: int    # sequences per dispatch (sequence-level parallelism k)
+
+
+DEFAULT_BUCKET_EDGES = (128, 256, 512, 1024, 2048, 4096, 8192, 16384)
+
+
+def _round_up(x: int, edges=DEFAULT_BUCKET_EDGES) -> int:
+    for edge in edges:
+        if x <= edge:
+            return edge
+    return int(2 ** np.ceil(np.log2(max(x, 1))))
+
+
+def make_bucket(q_lens, r_lens, *, base_bandwidth: int | None = None,
+                capacity: int = 64) -> BucketSpec:
+    """Bucket spec for a set of reads (single length class)."""
+    q_len = _round_up(int(np.max(q_lens)))
+    r_len = _round_up(int(np.max(r_lens)))
+    L = max(q_len, r_len)
+    w = base_bandwidth if base_bandwidth is not None else (10 if L <= 1024 else 30)
+    return BucketSpec(q_len=q_len, r_len=r_len,
+                      band=adaptive_bandwidth(L, w), capacity=capacity)
+
+
+@dataclasses.dataclass
+class AlignmentBatch:
+    """A padded, dispatch-ready batch of (query, reference) pairs."""
+    q_pad: np.ndarray   # (N, q_len) int8
+    r_pad: np.ndarray   # (N, r_len) int8
+    n: np.ndarray       # (N,) int32 true query lengths
+    m: np.ndarray       # (N,) int32 true reference lengths
+    spec: BucketSpec
+
+    @classmethod
+    def from_lists(cls, reads, refs, *, base_bandwidth=None, capacity=64):
+        n = np.asarray([len(x) for x in reads], np.int32)
+        m = np.asarray([len(x) for x in refs], np.int32)
+        spec = make_bucket(n, m, base_bandwidth=base_bandwidth,
+                           capacity=capacity)
+        N = len(reads)
+        # Pad N up to a multiple of capacity so every dispatch is full.
+        N_pad = int(np.ceil(N / spec.capacity) * spec.capacity)
+        q_pad = np.full((N_pad, spec.q_len), 4, np.int8)
+        r_pad = np.full((N_pad, spec.r_len), 4, np.int8)
+        for i, (read, ref) in enumerate(zip(reads, refs)):
+            q_pad[i, :len(read)] = read
+            r_pad[i, :len(ref)] = ref
+        n = np.concatenate([n, np.ones(N_pad - N, np.int32)])
+        m = np.concatenate([m, np.ones(N_pad - N, np.int32)])
+        return cls(q_pad=q_pad, r_pad=r_pad, n=n, m=m, spec=spec)
+
+    @property
+    def num_real(self) -> int:
+        return len(self.n)
+
+
+def align_batch(batch: AlignmentBatch, sc: ScoringConfig = MINIMAP2, *,
+                adaptive: bool = True, collect_tb: bool = False,
+                mode: str = "global"):
+    """Run the adaptive banded aligner over every dispatch group.
+
+    mode="semiglobal" gives free gaps at the reference-window ends — the
+    read-mapping configuration (candidate windows may be padded)."""
+    outs = []
+    cap = batch.spec.capacity
+    for lo in range(0, batch.q_pad.shape[0], cap):
+        sl = slice(lo, lo + cap)
+        outs.append(banded.banded_align_batch(
+            jnp.asarray(batch.q_pad[sl]), jnp.asarray(batch.r_pad[sl]),
+            jnp.asarray(batch.n[sl]), jnp.asarray(batch.m[sl]),
+            sc=sc, band=batch.spec.band, adaptive=adaptive,
+            collect_tb=collect_tb, mode=mode))
+    merged = {}
+    for key in outs[0]:
+        merged[key] = np.concatenate([np.asarray(o[key]) for o in outs])
+    return merged

@@ -1,0 +1,72 @@
+"""Tile-level parallelism (paper Fig. 6(a)) — shard_map over the device mesh.
+
+RAPIDx distributes kt sequence batches over 64 independent tiles with *no
+inter-tile communication*; the TPU analogue shards the batch dimension of
+an alignment dispatch over the mesh's data axes with `shard_map`. Because
+alignment is embarrassingly parallel, the lowered program contains zero
+collectives — asserted by tests and visible in the roofline table (the
+collective term of the alignment workload is 0).
+
+Also hosts the alignment serve-step used by the dry-run: the production
+mesh's ("pod", "data") axes both shard the batch; the "model" axis is
+unused (replicated) for alignment, matching the paper's single-tile
+independence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import banded
+from repro.core.scoring import ScoringConfig, MINIMAP2
+
+
+def make_aligner(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *, band: int,
+                 adaptive: bool = True, collect_tb: bool = False,
+                 batch_axes: tuple[str, ...] | None = None):
+    """Builds a pjit-able batched aligner sharded over the mesh.
+
+    Args:
+      mesh: device mesh; the batch shards over `batch_axes`.
+      batch_axes: mesh axes to shard the batch over. Defaults to all axes
+        named "pod"/"data" present in the mesh (alignment never uses
+        "model" — a tile needs no partner).
+    """
+    if batch_axes is None:
+        batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    spec = P(batch_axes)
+
+    def local_align(q, r, n, m):
+        return banded.banded_align_batch(q, r, n, m, sc=sc, band=band,
+                                         adaptive=adaptive,
+                                         collect_tb=collect_tb)
+
+    sharded = shard_map(local_align, mesh=mesh,
+                        in_specs=(spec, spec, spec, spec),
+                        out_specs=spec, check_vma=False)
+    return jax.jit(sharded)
+
+
+def alignment_serve_step(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *,
+                         band: int, collect_tb: bool = False):
+    """The alignment-as-a-service step for launch/serve.py and the dry-run.
+
+    Input: a padded dispatch batch (global). Output: scores (+ optional
+    traceback planes), sharded the same way.
+    """
+    return make_aligner(mesh, sc, band=band, collect_tb=collect_tb)
+
+
+def alignment_input_specs(global_batch: int, q_len: int, r_len: int):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return (
+        jax.ShapeDtypeStruct((global_batch, q_len), jnp.int8),
+        jax.ShapeDtypeStruct((global_batch, r_len), jnp.int8),
+        jax.ShapeDtypeStruct((global_batch,), jnp.int32),
+        jax.ShapeDtypeStruct((global_batch,), jnp.int32),
+    )

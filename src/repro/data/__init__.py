@@ -1,0 +1,3 @@
+from repro.data.genome import (ERROR_PROFILES, ReadSimulator, random_genome,
+                               simulate_read_pairs)
+from repro.data.tokens import TokenPipeline, synthetic_batch_specs

@@ -1,0 +1,113 @@
+"""Synthetic genome + read simulator (paper §VI-A "Datasets").
+
+The paper generates long reads with PBSIM (PacBio 15% / ONT_2D 30% total
+error) and short reads with Mason (Illumina 5%), against GRCh38. Offline we
+reproduce the *error model*: a random (or seeded) reference genome, reads
+sampled at random loci, then substitutions / insertions / deletions applied
+at the Table II rates. The output is (reference window, corrupted read)
+pairs — exactly what the alignment phase of the pipeline consumes after
+seeding/filtering (paper Fig. 2(a); seeding is upstream of RAPIDx's scope).
+
+Deterministic given a seed — required for reproducible accuracy tables and
+for the fault-tolerance tests (a restarted pipeline must replay the same
+stream).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Table II of the paper: per-base error rates.
+ERROR_PROFILES: dict[str, dict[str, float]] = {
+    "pacbio":   {"sub": 0.015, "ins": 0.090, "del": 0.045},  # 15% total
+    "ont_2d":   {"sub": 0.165, "ins": 0.050, "del": 0.085},  # 30% total
+    "illumina": {"sub": 0.030, "ins": 0.010, "del": 0.010},  # 5% total
+}
+
+
+def random_genome(length: int, seed: int = 0) -> np.ndarray:
+    """A uniform random genome in the 2-bit alphabet (int8)."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 4, size=length, dtype=np.int8)
+
+
+@dataclasses.dataclass
+class ReadSimulator:
+    """Samples reads from a reference and corrupts them per an error profile.
+
+    Mirrors PBSIM's CLR mode at the fidelity the paper's experiments need:
+    i.i.d. per-base substitution / insertion / deletion events at the given
+    rates (PBSIM's default profile is approximately uniform over the read).
+    """
+
+    genome: np.ndarray
+    profile: str = "illumina"
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.profile not in ERROR_PROFILES:
+            raise ValueError(f"unknown profile {self.profile!r}; "
+                             f"choose from {sorted(ERROR_PROFILES)}")
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample(self, read_len: int) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (reference_window, read).
+
+        The reference window is the true source span; the read is the
+        corrupted copy (its length varies around read_len because of
+        indels, as with a real sequencer).
+        """
+        rng = self._rng
+        rates = ERROR_PROFILES[self.profile]
+        start = int(rng.integers(0, len(self.genome) - read_len))
+        ref = self.genome[start:start + read_len].copy()
+
+        out = []
+        for base in ref:
+            roll = rng.random()
+            if roll < rates["del"]:
+                continue  # deletion: base dropped from the read
+            if roll < rates["del"] + rates["ins"]:
+                out.append(int(rng.integers(0, 4)))  # inserted base
+                out.append(int(base))
+                continue
+            if roll < rates["del"] + rates["ins"] + rates["sub"]:
+                out.append(int((base + 1 + rng.integers(0, 3)) % 4))  # sub
+                continue
+            out.append(int(base))
+        read = np.asarray(out, dtype=np.int8)
+        if read.size == 0:  # pathological corner at tiny read_len
+            read = np.asarray([int(rng.integers(0, 4))], dtype=np.int8)
+        return ref, read
+
+
+def simulate_read_pairs(num_pairs: int, read_len: int, profile: str,
+                        seed: int = 0, genome_len: int | None = None):
+    """Batch helper: returns padded arrays + true lengths.
+
+    Returns:
+      q_pad: (num_pairs, q_max) int8 reads (padded with 4).
+      r_pad: (num_pairs, r_max) int8 reference windows.
+      n: (num_pairs,) int32 read lengths.
+      m: (num_pairs,) int32 window lengths.
+    """
+    genome_len = genome_len or max(read_len * 8, 100_000)
+    sim = ReadSimulator(random_genome(genome_len, seed=seed ^ 0x9E3779B9),
+                        profile=profile, seed=seed)
+    refs, reads = [], []
+    for _ in range(num_pairs):
+        ref, read = sim.sample(read_len)
+        refs.append(ref)
+        reads.append(read)
+    n = np.asarray([len(x) for x in reads], dtype=np.int32)
+    m = np.asarray([len(x) for x in refs], dtype=np.int32)
+    q_max = int(n.max())
+    r_max = int(m.max())
+    q_pad = np.full((num_pairs, q_max), 4, dtype=np.int8)
+    r_pad = np.full((num_pairs, r_max), 4, dtype=np.int8)
+    for idx, (read, ref) in enumerate(zip(reads, refs)):
+        q_pad[idx, :len(read)] = read
+        r_pad[idx, :len(ref)] = ref
+    return q_pad, r_pad, n, m

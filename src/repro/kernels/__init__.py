@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec), one subpackage per
+kernel with ops.py (jit'd wrapper) and ref.py (pure-jnp oracle):
+
+  banded_dp/        in-VMEM adaptive banded DP wavefront (the paper's CM)
+  local_attention/  banded (sliding-window) flash attention
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.banded_dp.ops import banded_align_kernel_batch
+from repro.kernels.banded_dp.ref import banded_align_ref_batch

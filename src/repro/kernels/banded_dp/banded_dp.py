@@ -1,0 +1,281 @@
+"""Pallas TPU kernel: in-VMEM adaptive banded parallelized DP wavefront.
+
+TPU adaptation of the RAPIDx compute memory (CM, paper Fig. 5/6): the band
+state — the four shifted difference vectors, the 32-bit H band, and the
+band offset — lives in **VMEM scratch for the entire sweep**, exactly as
+RAPIDx keeps it resident in the ReRAM subarray ("in-situ alignment", §V-C).
+Sequences stream in once; only the 4-bit traceback flags stream out to HBM
+(the TBM analogue). Per wavefront step the kernel does a handful of 8x128
+VPU vector ops — the row-parallel PIM operations — plus two small gathers
+for the moving sequence window (the peripheral *shifter*).
+
+Parallelism mapping (paper Fig. 6):
+  * wavefront level  -> lane dimension (band B, up to 128 lanes)
+  * sequence level   -> sublane dimension (batch tile `bt` pairs)
+  * alignment-matrix -> the four fused vector updates per step
+  * tile level       -> grid over batch tiles (and shard_map over chips)
+
+Grid layout: (num_batch_tiles, num_step_chunks). TPU grids execute
+sequentially, so scratch persists across the step-chunk axis; each chunk
+advances the wavefront `chunk` steps and writes one (chunk, bt, B) block
+of traceback flags. State is (re)initialised when the chunk index is 0.
+
+Storage precision: band state is computed in int32 (native VPU lane width)
+and the difference quantities provably fit the paper's 5-bit range — the
+traceback plane is uint8 (4 bits used). See DESIGN.md §6 for why TPU has
+no profitable sub-byte path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.scoring import ScoringConfig
+
+NEG = -(1 << 28)   # plain ints: pallas kernels must not capture jax arrays
+DEAD = -(1 << 27)
+
+
+def _shift_toward_lane0(a, fill):
+    """result[:, k] = a[:, k+1]; last lane <- fill."""
+    return jnp.concatenate([a[:, 1:], jnp.full_like(a[:, :1], fill)], axis=1)
+
+
+def _shift_away_lane0(a, fill):
+    """result[:, k] = a[:, k-1]; lane 0 <- fill."""
+    return jnp.concatenate([jnp.full_like(a[:, :1], fill), a[:, :-1]], axis=1)
+
+
+def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
+                      adaptive: bool, bt: int,
+                      # refs
+                      q_ref, r_ref, n_ref, m_ref,          # inputs
+                      tb_ref, lo_out_ref, score_ref,        # outputs
+                      u_s, v_s, x_s, y_s, H_s, lo_s):       # scratch
+    o, e = sc.gap_open, sc.gap_extend
+    oe = jnp.int32(o + e)
+    shift = jnp.int32(2 * (o + e))
+    B = band
+    tblk = pl.program_id(1)
+
+    @pl.when(tblk == 0)
+    def _init():
+        z = jnp.zeros((bt, B), jnp.int32)
+        u_s[...] = z
+        v_s[...] = z
+        x_s[...] = z
+        y_s[...] = z
+        H_s[...] = jnp.full((bt, B), NEG, jnp.int32).at[:, 0].set(0)
+        lo_s[...] = jnp.zeros((bt, 1), jnp.int32)
+        score_ref[...] = jnp.full((bt, 1), NEG, jnp.int32)
+
+    n = n_ref[...].astype(jnp.int32)  # (bt, 1)
+    m = m_ref[...].astype(jnp.int32)
+    q = q_ref[...].astype(jnp.int32)  # (bt, Lq)
+    r = r_ref[...].astype(jnp.int32)
+    Lq = q.shape[1]
+    Lr = r.shape[1]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bt, B), 1)
+
+    def step(s, carry):
+        u, v, x, y, H, lo, score = carry
+        t = tblk * chunk + s + 1  # global wavefront step (diag index)
+
+        # ---- direction (paper §IV-B2 + feasibility clamps) ----
+        must_down = (lo + (n + m - t)) < (n - B + 1)
+        must_right = lo >= n
+        if adaptive:
+            heur_right = H[:, :1] > H[:, B - 1:]
+        else:
+            heur_right = (2 * lo + B) * (n + m) >= 2 * t * n
+        go_down = jnp.where(must_down, True,
+                            jnp.where(must_right, False, ~heur_right))
+        go_down_i = go_down.astype(jnp.int32)  # (bt,1)
+        lo_new = lo + go_down_i
+
+        # ---- neighbour alignment (the peripheral shifter) ----
+        def pick_up(a, fill):
+            return jnp.where(go_down, a, _shift_away_lane0(a, fill))
+
+        def pick_left(a, fill):
+            return jnp.where(go_down, _shift_toward_lane0(a, fill), a)
+
+        up_H = pick_up(H, NEG)
+        up_x = pick_up(x, jnp.int32(0))
+        up_v = pick_up(v, jnp.int32(0))
+        left_H = pick_left(H, NEG)
+        left_y = pick_left(y, jnp.int32(0))
+        left_u = pick_left(u, jnp.int32(0))
+        up_valid = up_H > DEAD
+        left_valid = left_H > DEAD
+
+        # ---- coordinates / masks / substitution scores ----
+        i_vec = lo_new + lanes          # (bt, B)
+        j_vec = t - i_vec
+        valid = (i_vec >= 0) & (i_vec <= n) & (j_vec >= 0) & (j_vec <= m)
+        interior = valid & (i_vec >= 1) & (j_vec >= 1)
+        brow = valid & (i_vec == 0) & (j_vec >= 1)
+        bcol = valid & (j_vec == 0) & (i_vec >= 1)
+
+        qb = jnp.take_along_axis(q, jnp.clip(i_vec - 1, 0, Lq - 1), axis=1)
+        rb = jnp.take_along_axis(r, jnp.clip(j_vec - 1, 0, Lr - 1), axis=1)
+        is_match = (qb == rb) & (qb < 4) & (rb < 4)
+        s_sub = jnp.where(is_match, jnp.int32(sc.match),
+                          jnp.int32(-sc.mismatch))
+
+        # ---- Eq. (4) parallelized update ----
+        x_arm = jnp.where(up_valid, up_x, NEG)
+        y_arm = jnp.where(left_valid, left_y, NEG)
+        v_up = jnp.where(up_valid, up_v, oe)
+        u_left = jnp.where(left_valid, left_u, oe)
+        diag_valid = up_valid | left_valid
+        s_arm = jnp.where(diag_valid, s_sub + shift, NEG)
+
+        a_new = jnp.maximum(jnp.maximum(s_arm, x_arm), y_arm)
+        u_new = a_new - v_up
+        v_new = a_new - u_left
+        x_new = jnp.maximum(a_new, x_arm + o) - u_left
+        y_new = jnp.maximum(a_new, y_arm + o) - v_up
+        H_new = jnp.where(up_valid, up_H + u_new - oe,
+                          jnp.where(left_valid, left_H + v_new - oe, NEG))
+
+        # ---- traceback flags ----
+        direction = jnp.where(a_new == s_arm, 0,
+                              jnp.where(a_new == x_arm, 1, 2))
+        ext_e = ((x_arm + o) > a_new).astype(jnp.int32)
+        ext_f = ((y_arm + o) > a_new).astype(jnp.int32)
+        code = (direction + 4 * ext_e + 8 * ext_f).astype(jnp.uint8)
+        code = jnp.where(interior, code, jnp.uint8(0))
+
+        # ---- boundary overrides ----
+        ob = jnp.int32(o)
+        v_new = jnp.where(brow, jnp.where(j_vec == 1, 0, ob), v_new)
+        x_new = jnp.where(brow, jnp.where(j_vec == 1, 0, ob), x_new)
+        u_new = jnp.where(brow, ob, u_new)
+        y_new = jnp.where(brow, ob, y_new)
+        u_new = jnp.where(bcol, jnp.where(i_vec == 1, 0, ob), u_new)
+        y_new = jnp.where(bcol, jnp.where(i_vec == 1, 0, ob), y_new)
+        v_new = jnp.where(bcol, ob, v_new)
+        x_new = jnp.where(bcol, ob, x_new)
+        H_new = jnp.where(brow, -(o + j_vec * e), H_new)
+        H_new = jnp.where(bcol, -(o + i_vec * e), H_new)
+        H_new = jnp.where(valid, H_new, NEG)
+        u_new = jnp.where(valid, u_new, 0)
+        v_new = jnp.where(valid, v_new, 0)
+        x_new = jnp.where(valid, x_new, 0)
+        y_new = jnp.where(valid, y_new, 0)
+
+        # ---- corner score capture + carry freeze ----
+        done = t == (n + m)  # (bt,1)
+        k_corner = jnp.clip(n - lo_new, 0, B - 1)  # (bt,1)
+        h_corner = jnp.take_along_axis(H_new, k_corner, axis=1)
+        score_new = jnp.where(done, h_corner, score)
+
+        active = t <= (n + m)
+        u = jnp.where(active, u_new, u)
+        v = jnp.where(active, v_new, v)
+        x = jnp.where(active, x_new, x)
+        y = jnp.where(active, y_new, y)
+        H = jnp.where(active, H_new, H)
+        lo = jnp.where(active, lo_new, lo)
+
+        # ---- stream traceback + band offsets out (TBM write) ----
+        tb_ref[s] = code
+        lo_out_ref[s] = lo[:, 0]
+        return (u, v, x, y, H, lo, score_new)
+
+    carry = (u_s[...], v_s[...], x_s[...], y_s[...], H_s[...], lo_s[...],
+             score_ref[...])
+    u, v, x, y, H, lo, score = jax.lax.fori_loop(0, chunk, step, carry)
+    u_s[...] = u
+    v_s[...] = v
+    x_s[...] = x
+    y_s[...] = y
+    H_s[...] = H
+    lo_s[...] = lo
+    score_ref[...] = score
+
+
+def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
+                        adaptive: bool = True, batch_tile: int = 8,
+                        chunk: int = 128, interpret: bool = True):
+    """pl.pallas_call wrapper. See ops.banded_align_kernel_batch for the
+    public jit'd API (padding, reshaping, traceback plumbing).
+
+    Args:
+      q_pad: (N, Lq) int8/int32, N divisible by batch_tile.
+      r_pad: (N, Lr).
+      n, m: (N,) true lengths.
+      band: band width B (lane dimension; <=128 keeps one VPU register row).
+      chunk: wavefront steps per grid step (traceback block height).
+      interpret: run the kernel body in interpret mode (CPU validation).
+    """
+    N, Lq = q_pad.shape
+    Lr = r_pad.shape[1]
+    bt = batch_tile
+    if N % bt:
+        raise ValueError(f"N={N} not divisible by batch_tile={bt}")
+    nb = N // bt
+    T = Lq + Lr
+    T_pad = int(-(-T // chunk) * chunk)
+    n_chunks = T_pad // chunk
+
+    kernel = functools.partial(_wavefront_kernel, sc, band, chunk,
+                               adaptive, bt)
+    grid = (nb, n_chunks)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((nb, T_pad, bt, band), jnp.uint8),  # tb
+        jax.ShapeDtypeStruct((nb, T_pad, bt), jnp.int32),        # lo per diag
+        jax.ShapeDtypeStruct((nb, bt, 1), jnp.int32),            # score
+    )
+    in_specs = [
+        pl.BlockSpec((1, bt, Lq), lambda b, t: (b, 0, 0)),
+        pl.BlockSpec((1, bt, Lr), lambda b, t: (b, 0, 0)),
+        pl.BlockSpec((1, bt, 1), lambda b, t: (b, 0, 0)),
+        pl.BlockSpec((1, bt, 1), lambda b, t: (b, 0, 0)),
+    ]
+    out_specs = (
+        pl.BlockSpec((1, chunk, bt, band), lambda b, t: (b, t, 0, 0)),
+        pl.BlockSpec((1, chunk, bt), lambda b, t: (b, t, 0)),
+        pl.BlockSpec((1, bt, 1), lambda b, t: (b, 0, 0)),
+    )
+    scratch_shapes = [
+        pltpu.VMEM((bt, band), jnp.int32),  # u
+        pltpu.VMEM((bt, band), jnp.int32),  # v
+        pltpu.VMEM((bt, band), jnp.int32),  # x
+        pltpu.VMEM((bt, band), jnp.int32),  # y
+        pltpu.VMEM((bt, band), jnp.int32),  # H
+        pltpu.VMEM((bt, 1), jnp.int32),     # lo
+    ]
+
+    def unsqueeze_kernel(q_r, r_r, n_r, m_r, tb_r, lo_r, sc_r, *scratch):
+        # Blocks carry a leading size-1 grid dim; present 2-D views to the
+        # kernel body.
+        kernel(q_r.at[0], r_r.at[0], n_r.at[0], m_r.at[0],
+               tb_r.at[0], lo_r.at[0], sc_r.at[0], *scratch)
+
+    tb, los, score = pl.pallas_call(
+        unsqueeze_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )(q_pad.reshape(nb, bt, Lq).astype(jnp.int32),
+      r_pad.reshape(nb, bt, Lr).astype(jnp.int32),
+      n.reshape(nb, bt, 1).astype(jnp.int32),
+      m.reshape(nb, bt, 1).astype(jnp.int32))
+
+    # Reassemble to (N, ...) batch-major layouts matching core.banded.
+    tb = tb.transpose(0, 2, 1, 3).reshape(N, T_pad, band)[:, :T]
+    los = los.transpose(0, 2, 1).reshape(N, T_pad)[:, :T]
+    los = jnp.concatenate([jnp.zeros((N, 1), jnp.int32), los], axis=1)
+    score = score.reshape(N)
+    return {"score": score, "tb": tb, "los": los}

@@ -1,0 +1,45 @@
+"""jit'd public wrapper for the banded DP Pallas kernel.
+
+Handles batch padding to the kernel tile, dispatch, and exposes the same
+result dict as `core.banded.banded_align_batch` so callers can swap the
+XLA reference path and the kernel path behind one API.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scoring import ScoringConfig
+from repro.kernels.banded_dp.banded_dp import banded_align_pallas
+
+
+def banded_align_kernel_batch(q_pad, r_pad, n, m, *, sc: ScoringConfig,
+                              band: int, adaptive: bool = True,
+                              batch_tile: int = 8, chunk: int = 128,
+                              interpret: bool = True):
+    """Kernel-path batched alignment.
+
+    Pads the batch up to a multiple of batch_tile with dummy pairs, runs
+    the Pallas wavefront, and strips the padding. Returns
+    {'score': (N,), 'tb': (N, T, B) uint8, 'los': (N, T+1) int32}.
+    """
+    q_pad = jnp.asarray(q_pad)
+    r_pad = jnp.asarray(r_pad)
+    n = jnp.asarray(n, jnp.int32)
+    m = jnp.asarray(m, jnp.int32)
+    N = q_pad.shape[0]
+    N_pad = int(-(-N // batch_tile) * batch_tile)
+    if N_pad != N:
+        pad = N_pad - N
+        q_pad = jnp.concatenate(
+            [q_pad, jnp.full((pad, q_pad.shape[1]), 4, q_pad.dtype)])
+        r_pad = jnp.concatenate(
+            [r_pad, jnp.full((pad, r_pad.shape[1]), 4, r_pad.dtype)])
+        n = jnp.concatenate([n, jnp.ones((pad,), jnp.int32)])
+        m = jnp.concatenate([m, jnp.ones((pad,), jnp.int32)])
+
+    out = banded_align_pallas(q_pad, r_pad, n, m, sc=sc, band=band,
+                              adaptive=adaptive, batch_tile=batch_tile,
+                              chunk=chunk, interpret=interpret)
+    return {k: v[:N] for k, v in out.items()}

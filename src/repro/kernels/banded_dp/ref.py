@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the banded DP wavefront kernel.
+
+The oracle *is* the paper-faithful `core.banded` lax.scan implementation —
+the kernel must reproduce its scores and traceback planes bit-exactly
+(integer DP: exact equality, not allclose).
+"""
+
+from __future__ import annotations
+
+from repro.core.banded import banded_align_batch
+
+
+def banded_align_ref_batch(q_pad, r_pad, n, m, *, sc, band, adaptive=True):
+    """Reference result dict with 'score', 'tb' (N,T,B), 'los' (N,T+1)."""
+    return banded_align_batch(q_pad, r_pad, n, m, sc=sc, band=band,
+                              adaptive=adaptive, collect_tb=True)

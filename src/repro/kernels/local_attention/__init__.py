@@ -1,0 +1,2 @@
+from repro.kernels.local_attention.ops import flash_attention
+from repro.kernels.local_attention.ref import attention_ref

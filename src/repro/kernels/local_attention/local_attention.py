@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: banded (sliding-window) flash attention.
+
+The second transferable RAPIDx idea (DESIGN.md §4): restrict an (i, j)
+dynamic-programming grid to a band around the diagonal. For attention the
+"grid" is the query x key score matrix; a causal sliding window of width W
+is exactly the paper's band, and the online-softmax accumulation plays the
+role of the wavefront state that never leaves VMEM.
+
+One kernel serves both:
+  * W >= T  -> full causal flash attention (upper-triangle blocks skipped),
+  * W <  T  -> sliding-window attention (gemma3 local layers, mixtral SWA,
+               recurrentgemma local attention).
+
+Grid: (batch*q_heads, num_q_blocks, num_kv_blocks_in_window). The KV block
+index map folds GQA (q head h reads kv head h // group) and the window
+offset; out-of-range window blocks are clamped and fully masked, and
+blocks strictly above the diagonal are skipped with pl.when.
+
+Scratch: running max m, normaliser l, and f32 accumulator — flash
+attention's VMEM-resident band state.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(block_q: int, block_k: int, window: int, n_kv_blocks: int,
+                  scale: float,
+                  q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    # Unclamped kv block this step wants. The window for query block qi
+    # spans kv blocks [last - (n_kv_blocks-1), last] where last is the kv
+    # block containing this q block's final position.
+    last_kv = (qi * block_q + block_q - 1) // block_k
+    kv_blk = last_kv - (n_kv_blocks - 1) + ki
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s[...], NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+
+    # Skip blocks entirely outside the band: below position 0, above the
+    # causal diagonal, or fully behind the window of every query in the
+    # block (the banding win — same trapezoid as the DP band).
+    below_window = (kv_blk * block_k + block_k - 1) < (qi * block_q - window + 1)
+
+    @pl.when((kv_blk >= 0) & ~below_window)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32) * scale        # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)                # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (BQ, BK)
+
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = kv_blk * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_s[...]                                # (BQ, 1)
+        m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_cur), 0.0)     # (BQ, BK)
+        l_s[...] = l_s[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_s[...] = m_cur
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_s[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_s[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, window: int | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """Banded flash attention.
+
+    Args:
+      q: (B, Hq, T, D); k, v: (B, Hkv, T, D) with Hq % Hkv == 0 (GQA).
+      window: sliding-window width W (None -> full causal).
+      interpret: interpret mode for CPU validation.
+
+    Returns: (B, Hq, T, D), same dtype as q.
+    """
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not divisible by Hkv={Hkv}")
+    group = Hq // Hkv
+    block_q = min(block_q, T)
+    block_k = min(block_k, T)
+    if T % block_q or T % block_k:
+        raise ValueError(f"T={T} must divide block sizes {block_q},{block_k}")
+    W = int(window) if window is not None else T
+    # Worst-case kv blocks visible from one q block:
+    #   (block_q-1)//block_k spanned by the q block itself
+    # + ceil((W-1)/block_k) reaching back through the window, + 1.
+    n_kv_blocks = min((block_q - 1) // block_k + -(-max(W - 1, 0) // block_k) + 1,
+                      T // block_k)
+    scale = 1.0 / math.sqrt(D)
+
+    qf = q.reshape(B * Hq, T, D)
+    kf = k.reshape(B * Hkv, T, D)
+    vf = v.reshape(B * Hkv, T, D)
+
+    grid = (B * Hq, T // block_q, n_kv_blocks)
+
+    def q_index(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_index(bh, qi, ki):
+        last_kv = (qi * block_q + block_q - 1) // block_k
+        kv_blk = last_kv - (n_kv_blocks - 1) + ki
+        # Clamp: out-of-range blocks are skipped/masked in-kernel.
+        nblocks = T // block_k
+        kv_blk = jnp.clip(kv_blk, 0, nblocks - 1)
+        return (bh // group, kv_blk, 0)
+
+    kernel = functools.partial(_flash_kernel, block_q, block_k, W,
+                               n_kv_blocks, scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), q_index),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, T, D)

@@ -1,0 +1,18 @@
+"""jit'd wrapper for the banded flash attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.local_attention.local_attention import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, window=None, block_q=128, block_k=128,
+                    interpret=True):
+    """Banded flash attention (see local_attention.flash_attention_pallas)."""
+    return flash_attention_pallas(q, k, v, window=window, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: masked causal / sliding-window attention (O(T^2))."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, window: int | None = None):
+    """Args as flash_attention: q (B,Hq,T,D), k/v (B,Hkv,T,D). f32 math."""
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    if group != 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    W = window if window is not None else T
+    mask = (kpos <= qpos) & (kpos > qpos - W)
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); 512 host devices back the 16x16 single-pod and
+2x16x16 multi-pod production meshes.
+
+Per cell this driver:
+  1. builds abstract inputs/state (ShapeDtypeStruct — no allocation),
+  2. resolves shardings from sharding.rules against the mesh,
+  3. jit(...).lower(...).compile()  — sharding mismatches, unsupported
+     collectives, or compile-time OOM are failures of the framework,
+  4. records memory_analysis(), cost_analysis(), and the collective-op
+     byte inventory parsed from the optimized HLO into
+     results/dryrun/<cell>.json for §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                # everything
+  ... --arch qwen3-0.6b --shape train_4k --mesh single        # one cell
+  ... --list                                                  # show plan
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.configs.rapidx import CONFIG as RAPIDX
+from repro.core.distributed import alignment_input_specs, make_aligner
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlo_collectives import collective_bytes_by_kind
+from repro.sharding import batch_specs, cache_specs, param_specs
+from repro.train.train_step import (make_prefill_step, make_serve_step,
+                                    make_train_step)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_total(mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             skip_existing: bool = True):
+    """Lower+compile one cell; returns the result record."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    out_path = os.path.join(RESULTS_DIR, cell_id + ".json")
+    if skip_existing and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "mesh_shape": list(mesh.devices.shape), "status": "error"}
+    t0 = time.time()
+    try:
+        if arch == "rapidx-align":
+            record.update(_run_alignment_cell(mesh, shape_name))
+        else:
+            record.update(_run_lm_cell(mesh, arch, shape_name))
+        record["status"] = "ok"
+    except Exception as e:  # record the failure for triage
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["compile_seconds"] = round(time.time() - t0, 1)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def _analyze(lowered, compiled, extra):
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+            mem[field] = getattr(ma, field, 0)
+        mem["total_per_device"] = (mem.get("argument_size_in_bytes", 0)
+                                   + mem.get("output_size_in_bytes", 0)
+                                   + mem.get("temp_size_in_bytes", 0)
+                                   - mem.get("alias_size_in_bytes", 0))
+    coll = collective_bytes_by_kind(compiled.as_text())
+    return {
+        "flops_per_device": ca.get("flops", 0.0),
+        "bytes_accessed_per_device": ca.get("bytes accessed", 0.0),
+        "memory": mem,
+        "collectives": coll,
+        **extra,
+    }
+
+
+def _act_spec(mesh, cfg, shape, enable=False):
+    """Sequence-parallel activation constraint (residual sharded batch x
+    DP, seq x "model"). Kept as an explicit §Perf lever: measured on this
+    XLA version the propagation through the chunked-attention reshapes
+    REPLICATES the batch dim inside attention (see EXPERIMENTS.md §Perf
+    iteration log), so it is off by default."""
+    if not enable:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = _dp_total(mesh)
+    model = sizes.get("model", 1)
+    nm = S.microbatches_for(cfg, shape, dp) if shape.kind == "train" else 1
+    micro_b = shape.global_batch // nm
+    if micro_b % dp != 0 or shape.seq_len % model != 0:
+        return None
+    return P(dp_axes, "model", None)
+
+
+def _run_lm_cell(mesh, arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return {"skipped": "pure full-attention arch; long_500k needs "
+                           "bounded decode state (DESIGN.md)"}
+
+    inputs = S.input_specs(cfg, shape)
+    in_batch_specs = batch_specs(inputs, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    if shape.kind == "train":
+        # Size microbatches by the data axis only: this XLA version's
+        # GSPMD replicates the train computation across "pod" regardless
+        # of batch shardings (verified nm=1, no-scan; see EXPERIMENTS.md
+        # §Dry-run) — explicit pod-DP lives in train.compressed.
+        nm = S.microbatches_for(cfg, shape,
+                                dict(zip(mesh.axis_names,
+                                         mesh.devices.shape))["data"])
+        state = S.abstract_state(cfg)
+        st_specs = {"params": param_specs(state["params"], mesh),
+                    "opt": {"m": param_specs(state["opt"]["m"], mesh),
+                            "v": param_specs(state["opt"]["v"], mesh),
+                            "step": P()}}
+        # Pre-split microbatch inputs (nm, B/nm, ...): the leading nm dim
+        # is unsharded; the per-micro batch dim shards over "data" only
+        # (GSPMD replicates train over "pod" on this XLA version — see
+        # §Dry-run — so a ("pod","data") micro sharding is both
+        # non-divisible and pointless).
+        if nm > 1:
+            inputs2 = jax.tree.map(
+                lambda t: jax.ShapeDtypeStruct(
+                    (nm, t.shape[0] // nm) + t.shape[1:], t.dtype), inputs)
+            in_specs2 = jax.tree.map(
+                lambda t: P(None, "data", *([None] * (len(t.shape) - 2))),
+                inputs2)
+        else:
+            inputs2, in_specs2 = inputs, in_batch_specs
+        step = make_train_step(cfg, num_microbatches=nm,
+                               act_spec=_act_spec(mesh, cfg, shape))
+        jitted = jax.jit(step,
+                         in_shardings=(_named(mesh, st_specs),
+                                       _named(mesh, in_specs2)),
+                         donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(state, inputs2)
+            compiled = lowered.compile()
+        return _analyze(lowered, compiled, {"microbatches": nm,
+                                            "step_kind": "train"})
+
+    if shape.kind == "prefill":
+        params = S.abstract_params(cfg)
+        p_specs = param_specs(params, mesh)
+        # Sequence-parallel activations pay off for prefill (residual and
+        # TP-boundary buffers shrink 1/TP; measured 33 -> 17 GB on gemma3)
+        # — except for MoE layers, whose token-dim dispatch reshape undoes
+        # the constraint unprofitably (measured 52 -> 75 GB on mixtral).
+        sp = not cfg.moe_num_experts
+        step = make_prefill_step(cfg,
+                                 act_spec=_act_spec(mesh, cfg, shape,
+                                                    enable=sp))
+        jitted = jax.jit(step, in_shardings=(_named(mesh, p_specs),
+                                             _named(mesh, in_batch_specs)))
+        with mesh:
+            lowered = jitted.lower(params, inputs)
+            compiled = lowered.compile()
+        return _analyze(lowered, compiled, {"step_kind": "prefill"})
+
+    # decode
+    params = S.abstract_params(cfg)
+    p_specs = param_specs(params, mesh)
+    cache = S.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_specs = cache_specs(cache, mesh, batch=shape.global_batch)
+    # Masked (shard-friendly) cache writes whenever the cache sequence
+    # dim carries a sharding (kv heads don't divide "model", or batch=1
+    # long-context sequence sharding) — see models.attention.
+    masked = (cfg.n_kv_heads % sizes.get("model", 1) != 0
+              or shape.global_batch == 1)
+    step = make_serve_step(cfg, masked_cache_write=masked)
+    jitted = jax.jit(step,
+                     in_shardings=(_named(mesh, p_specs),
+                                   _named(mesh, in_batch_specs),
+                                   _named(mesh, c_specs)),
+                     donate_argnums=(2,))
+    with mesh:
+        lowered = jitted.lower(params, inputs, cache)
+        compiled = lowered.compile()
+    return _analyze(lowered, compiled, {"step_kind": "decode",
+                                        "masked_cache_write": masked})
+
+
+def _run_alignment_cell(mesh, shape_name):
+    """The paper's own workload: batched banded alignment, tile-parallel."""
+    length = {"short_100": 100, "short_250": 256, "long_2k": 2048,
+              "long_10k": 10240}[shape_name]
+    band = RAPIDX.band_for(length)
+    global_batch = 64 * _dp_total(mesh)
+    aligner = make_aligner(mesh, RAPIDX.scoring, band=band)
+    inputs = alignment_input_specs(global_batch, length, length)
+    lowered = aligner.lower(*inputs)
+    compiled = lowered.compile()
+    return _analyze(lowered, compiled,
+                    {"step_kind": "align", "band": band, "length": length,
+                     "global_batch": global_batch})
+
+
+ALIGN_SHAPES = ("short_100", "short_250", "long_2k", "long_10k")
+
+
+def plan(archs=None, shapes=None, meshes=("single", "multipod")):
+    archs = archs or (list_archs() + ["rapidx-align"])
+    cells = []
+    for arch in archs:
+        if arch == "rapidx-align":
+            arch_shapes = [s for s in (shapes or ALIGN_SHAPES)
+                           if s in ALIGN_SHAPES]
+        else:
+            arch_shapes = [s for s in (shapes or list(SHAPES))
+                           if s in SHAPES]
+        for sh in arch_shapes:
+            for mesh in meshes:
+                cells.append((arch, sh, mesh))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append")
+    ap.add_argument("--shape", action="append")
+    ap.add_argument("--mesh", action="append",
+                    choices=["single", "multipod"])
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = plan(args.arch, args.shape,
+                 tuple(args.mesh) if args.mesh else ("single", "multipod"))
+    if args.list:
+        for c in cells:
+            print("%s %s %s" % c)
+        return
+
+    n_ok = n_skip = n_err = 0
+    for arch, sh, mesh in cells:
+        rec = run_cell(arch, sh, mesh, skip_existing=not args.force)
+        if rec.get("skipped"):
+            tag, n_skip = "SKIP", n_skip + 1
+        elif rec["status"] == "ok":
+            tag, n_ok = "OK", n_ok + 1
+        else:
+            tag, n_err = "ERR", n_err + 1
+        mem = rec.get("memory", {}).get("total_per_device", 0) / 1e9
+        print(f"[{tag}] {arch:20s} {sh:12s} {mesh:8s} "
+              f"mem/dev={mem:6.2f}GB flops/dev={rec.get('flops_per_device', 0):.3g} "
+              f"({rec.get('compile_seconds', 0)}s)"
+              + (f"  !! {rec.get('error', '')[:120]}" if tag == "ERR" else ""))
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh definition.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count before first jax use.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips), or 2x16x16 across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1, pod: int | None = None):
+    """Small mesh over however many devices exist (tests)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

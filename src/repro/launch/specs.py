@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct input specs + per-cell microbatch policy for the
+dry-run (no allocation — the shannon/kernels pattern).
+
+input_specs(cfg, shape) returns the exact abstract inputs each step kind
+consumes:
+  train   -> {tokens/embeds/patch_embeds, labels}
+  prefill -> same minus labels
+  decode  -> one-token batch; the KV/recurrent cache specs come from
+             jax.eval_shape(init_cache, ...)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import init_cache, init_params
+from repro.train.train_step import init_train_state
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        if cfg.input_mode == "embeds":
+            return {"embeds": sd((B, 1, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": sd((B, 1), jnp.int32)}
+    out = {}
+    if cfg.input_mode == "tokens":
+        out["tokens"] = sd((B, S), jnp.int32)
+    elif cfg.input_mode == "embeds":
+        out["embeds"] = sd((B, S, cfg.d_model), jnp.bfloat16)
+    elif cfg.input_mode == "patch_prefix":
+        out["patch_embeds"] = sd((B, cfg.num_prefix, cfg.d_model),
+                                 jnp.bfloat16)
+        out["tokens"] = sd((B, S - cfg.num_prefix), jnp.int32)
+    if shape.kind == "train":
+        t_out = S - (cfg.num_prefix if cfg.input_mode == "patch_prefix"
+                     else 0)
+        out["labels"] = sd((B, t_out), jnp.int32)
+    return out
+
+
+def abstract_state(cfg: ArchConfig):
+    """Abstract train state (params + AdamW moments) via eval_shape.
+
+    Archs >= 50B params use bf16 moments (memory policy; see optim.adamw).
+    """
+    key = jax.random.PRNGKey(0)
+    md = jnp.bfloat16 if cfg.param_count() >= 50e9 else None
+    st = jax.eval_shape(
+        lambda k: init_train_state(cfg, k, moments_dtype=md).tree(), key)
+    return st
+
+
+def abstract_params(cfg: ArchConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, dtype=jnp.bfloat16))
+
+
+def microbatches_for(cfg: ArchConfig, shape: ShapeSpec, dp_total: int,
+                     budget_bytes: float = 6e9) -> int:
+    """Gradient-accumulation factor for train cells.
+
+    Calibrated against measured dry-run footprints: per-device activation
+    memory ~= tokens_per_device x n_layers x d_model x C bytes with
+    C ~ 12 (remat-saved period residuals, flash-attention carries, f32
+    softmax state, layer-local temporaries). Must divide the global batch
+    and keep each microbatch >= 1 sample per DP shard.
+    """
+    if shape.kind != "train":
+        return 1
+    tokens_per_device = shape.global_batch * shape.seq_len / dp_total
+    est = tokens_per_device * cfg.n_layers * cfg.d_model * 12
+    nm = max(1, math.ceil(est / budget_bytes))
+    nm = 1 << (nm - 1).bit_length()  # next power of two
+    nm = min(nm, shape.global_batch // dp_total)  # micro-batch >= 1/shard
+    return max(nm, 1)

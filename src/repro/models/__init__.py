@@ -1,0 +1,2 @@
+from repro.models.model import (LanguageModel, init_cache, init_params,
+                                model_apply, model_decode)

@@ -1,0 +1,251 @@
+"""GQA attention with three execution paths and KV caches.
+
+Paths:
+  * "naive"   — masked einsum attention, O(T^2) memory. Tests/smoke only.
+  * "chunked" — pure-JAX flash attention: lax.scan over query chunks with
+    an inner scan over KV chunks; online softmax keeps memory at
+    O(chunk^2). Blocks wholly outside the causal window are skipped with
+    lax.cond — the XLA twin of the Pallas kernel's banded block skip, and
+    the path the multi-pod dry-run lowers (Pallas doesn't lower on the
+    CPU dry-run platform).
+  * "pallas"  — kernels/local_attention (TPU, or interpret mode).
+
+Sliding-window (banded) attention uses the same machinery with
+window=W (DESIGN.md §4: the paper's band around the DP diagonal).
+
+Caches: full cache (B, Hkv, S_max, D) for global layers; ring-buffer cache
+(B, Hkv, W, D) for windowed layers — bounded state for the long_500k
+decode shapes. Keys are stored post-RoPE so ring eviction is safe.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, Hkv, S, D) — S = max_len (full) or W (ring)
+    v: jnp.ndarray
+    length: jnp.ndarray   # () int32 — tokens written so far
+    # Ring-ness is static: a cache is a ring buffer iff the layer is
+    # windowed, which callers know from the block kind (`window` arg).
+
+
+def attention_init(key, cfg, dtype=jnp.float32):
+    """cfg needs: d_model, n_heads, n_kv_heads, head_dim, qkv_bias, qk_norm."""
+    keys = jax.random.split(key, 6)
+    D = cfg.head_dim
+    p = {
+        "wq": layers.dense_init(keys[0], cfg.d_model, cfg.n_heads * D,
+                                bias=cfg.qkv_bias, dtype=dtype),
+        "wk": layers.dense_init(keys[1], cfg.d_model, cfg.n_kv_heads * D,
+                                bias=cfg.qkv_bias, dtype=dtype),
+        "wv": layers.dense_init(keys[2], cfg.d_model, cfg.n_kv_heads * D,
+                                bias=cfg.qkv_bias, dtype=dtype),
+        "wo": layers.dense_init(keys[3], cfg.n_heads * D, cfg.d_model,
+                                dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(D, dtype)
+        p["k_norm"] = layers.rmsnorm_init(D, dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, rope=None):
+    B, T, _ = x.shape
+    D = cfg.head_dim
+    q = layers.dense_apply(p["wq"], x).reshape(B, T, cfg.n_heads, D)
+    k = layers.dense_apply(p["wk"], x).reshape(B, T, cfg.n_kv_heads, D)
+    v = layers.dense_apply(p["wv"], x).reshape(B, T, cfg.n_kv_heads, D)
+    if cfg.qk_norm:
+        q = layers.rmsnorm_apply(p["q_norm"], q)
+        k = layers.rmsnorm_apply(p["k_norm"], k)
+    # (B, H, T, D)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if rope is None:
+        rope = layers.rope_tables(positions[:, None, :], D, cfg.rope_theta,
+                                  dtype=x.dtype)
+    q = layers.apply_rope(q, tables=rope)
+    k = layers.apply_rope(k, tables=rope)
+    return q, k, v
+
+
+def _naive_attention(q, k, v, window):
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, T, D)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    W = window if window is not None else T
+    mask = (kpos <= qpos) & (kpos > qpos - W)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bkcd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, T, D).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, window, q_chunk=512, k_chunk=512):
+    """Pure-JAX flash attention with causal/window block skipping."""
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    q_chunk = min(q_chunk, T)
+    k_chunk = min(k_chunk, T)
+    nq, nk = T // q_chunk, T // k_chunk
+    W = window if window is not None else T
+    scale = 1.0 / math.sqrt(D)
+
+    # Keep q/k/v in the compute dtype (bf16 on TPU: MXU-native, halves the
+    # residual footprint); the online-softmax state (m, l, acc) is f32.
+    qg = (q.reshape(B, Hkv, G, nq, q_chunk, D) * scale)
+    kg = k.reshape(B, Hkv, nk, k_chunk, D)
+    vg = v.reshape(B, Hkv, nk, k_chunk, D)
+
+    def q_body(_, qi):
+        qc = qg[:, :, :, qi]                     # (B, Hkv, G, Cq, D)
+        m0 = jnp.full(qc.shape[:-1] + (1,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros_like(m0)
+        acc0 = jnp.zeros(qc.shape, jnp.float32)
+
+        # jax.checkpoint on the scan body = flash-attention backward:
+        # only the (m, l, acc) carries are saved per KV block; the score
+        # matrices are recomputed in the backward pass. Without this the
+        # scan stores every block's probability matrix (O(T^2) again).
+        @jax.checkpoint
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            # Block is live iff it overlaps [qi*Cq - W + 1, (qi+1)*Cq - 1].
+            lo_q = qi * q_chunk
+            hi_q = lo_q + q_chunk - 1
+            lo_k = ki * k_chunk
+            hi_k = lo_k + k_chunk - 1
+            live = (lo_k <= hi_q) & (hi_k >= lo_q - W + 1)
+
+            def attend(c):
+                m, l, acc = c
+                kc = kg[:, :, ki]
+                vc = vg[:, :, ki]
+                s = jnp.einsum("bkgqd,bkcd->bkgqc", qc, kc,
+                               preferred_element_type=jnp.float32)
+                qpos = lo_q + jnp.arange(q_chunk)[:, None]
+                kpos = lo_k + jnp.arange(k_chunk)[None, :]
+                msk = (kpos <= qpos) & (kpos > qpos - W)
+                s = jnp.where(msk, s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+                alpha = jnp.exp(m - m_new)
+                pr = jnp.where(msk, jnp.exp(s - m_new), 0.0)
+                l_new = l * alpha + pr.sum(axis=-1, keepdims=True)
+                acc_new = acc * alpha + jnp.einsum(
+                    "bkgqc,bkcd->bkgqd", pr.astype(qc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+                return m_new, l_new, acc_new
+
+            carry = jax.lax.cond(live, attend, lambda c: c, (m, l, acc))
+            return carry, None
+
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, acc0),
+                                      jnp.arange(nk))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return None, (acc / l)
+
+    _, out = jax.lax.scan(q_body, None, jnp.arange(nq))
+    # out: (nq, B, Hkv, G, Cq, D) -> (B, Hq, T, D)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, T, D)
+    return out.astype(q.dtype)
+
+
+def attention_apply(p, cfg, x, positions, *, window=None, impl="chunked",
+                    q_chunk=512, k_chunk=512, rope=None):
+    """Training / prefill self-attention. x: (B, T, d_model)."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, rope=rope)
+    if impl == "naive" or (impl == "chunked" and T <= q_chunk):
+        out = _naive_attention(q, k, v, window)
+    elif impl == "chunked":
+        out = _chunked_attention(q, k, v, window, q_chunk, k_chunk)
+    elif impl == "pallas":
+        from repro.kernels.local_attention.ops import flash_attention
+        out = flash_attention(q, k, v, window=window)
+    else:
+        raise ValueError(impl)
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, cfg.n_heads * cfg.head_dim)
+    return layers.dense_apply(p["wo"], out)
+
+
+# ---------------------------------------------------------------------------
+# Decode path with KV caches
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cfg, max_len: int, *, window=None,
+                  dtype=jnp.bfloat16) -> KVCache:
+    S = min(window, max_len) if window is not None else max_len
+    shape = (batch, cfg.n_kv_heads, S, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def attention_decode(p, cfg, x, cache: KVCache, *, window=None,
+                     masked_write: bool = False):
+    """One-token decode. x: (B, 1, d_model); returns (y, new_cache).
+
+    masked_write=True writes the new KV entry with an elementwise
+    select over an iota==slot mask instead of dynamic_update_slice.
+    When the cache's sequence dim is sharded (kv heads don't divide the
+    model axis), GSPMD can only partition DUS by replicating the whole
+    cache per layer; the masked write stays fully sharded.
+    """
+    B = x.shape[0]
+    D = cfg.head_dim
+    pos = cache.length  # scalar position of the new token
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)     # (B,H,1,D)
+
+    S = cache.k.shape[2]
+    ring = window is not None
+    slot = (pos % S) if ring else jnp.minimum(pos, S - 1)
+    if masked_write:
+        sel = (jnp.arange(S) == slot)[None, None, :, None]
+        k_new = jnp.where(sel, k.astype(cache.k.dtype), cache.k)
+        v_new = jnp.where(sel, v.astype(cache.v.dtype), cache.v)
+    else:
+        k_new = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, 0, slot, 0))
+        v_new = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, 0, slot, 0))
+
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    G = Hq // Hkv
+    # Keep the cache in its storage dtype: an .astype(f32) here would
+    # materialise a full f32 copy of the 32k cache per layer (measured
+    # ~14 GB/device on musicgen decode_32k). MXU accumulates in f32 via
+    # preferred_element_type.
+    qg = q.reshape(B, Hkv, G, 1, D).astype(cache.k.dtype)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, k_new,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    # Valid slots: for ring cache all slots < min(pos+1, S) (with window
+    # semantics positions pos-W+1..pos are exactly what the ring holds);
+    # for full cache slots <= pos.
+    slots = jnp.arange(S)
+    live = slots < jnp.minimum(pos + 1, S)
+    s = jnp.where(live[None, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bkcd->bkgqd", pr.astype(cache.k.dtype), v_new,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, Hq, 1, D).transpose(0, 2, 1, 3)
+    out = out.reshape(B, 1, Hq * D).astype(x.dtype)
+    y = layers.dense_apply(p["wo"], out)
+    return y, KVCache(k=k_new, v=v_new, length=cache.length + 1)

@@ -1,0 +1,166 @@
+"""Layer blocks: one (init, apply, decode, cache_init) quadruple per kind.
+
+Kinds (ArchConfig.pattern entries):
+  attn     — pre-norm GQA attention + gated MLP (global causal)
+  local    — same with sliding-window (banded) attention
+  moe      — attention + mixture-of-experts FFN
+  moe_swa  — windowed attention + MoE (mixtral)
+  rglru    — Griffin recurrent block (conv + RG-LRU, gated) + MLP
+  mlstm    — xLSTM matrix-memory block (conv front, no FFN)
+  slstm    — xLSTM scalar block (no FFN)
+
+All blocks share the interface:
+  block_init(key, cfg, kind, dtype) -> params
+  block_apply(params, cfg, kind, x, positions) -> y            (train/prefill)
+  block_cache_init(cfg, kind, batch, max_len, dtype) -> cache
+  block_decode(params, cfg, kind, x, cache) -> (y, cache)      (1 token)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, rglru, xlstm
+
+CONV_WIDTH = 4
+
+
+def _ffn_init(key, cfg, kind, dtype):
+    if kind in ("moe", "moe_swa"):
+        return {"moe": moe.moe_init(key, cfg, dtype)}
+    if cfg.d_ff:
+        return {"mlp": layers.mlp_init(key, cfg.d_model, cfg.d_ff,
+                                       kind=cfg.mlp_kind, dtype=dtype)}
+    return {}
+
+
+def _ffn_apply(p, cfg, kind, x):
+    if "moe" in p:
+        return moe.moe_apply(p["moe"], cfg, x)
+    if "mlp" in p:
+        return layers.mlp_apply(p["mlp"], x, kind=cfg.mlp_kind)
+    return jnp.zeros_like(x)
+
+
+def block_init(key, cfg, kind: str, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"ln1": layers.rmsnorm_init(d, dtype)}
+    if kind in ("attn", "local", "moe", "moe_swa"):
+        p["attn"] = attention.attention_init(k1, cfg, dtype)
+        p["ln2"] = layers.rmsnorm_init(d, dtype)
+        p.update(_ffn_init(k2, cfg, kind, dtype))
+    elif kind == "rglru":
+        kk = jax.random.split(k1, 4)
+        p["rx"] = layers.dense_init(kk[0], d, d, dtype=dtype)
+        p["rgate"] = layers.dense_init(kk[1], d, d, dtype=dtype)
+        p["conv"] = layers.conv1d_init(kk[2], d, CONV_WIDTH, dtype)
+        p["rglru"] = rglru.rglru_init(kk[3], d, dtype)
+        p["rout"] = layers.dense_init(k3, d, d, dtype=dtype)
+        p["ln2"] = layers.rmsnorm_init(d, dtype)
+        p.update(_ffn_init(k4, cfg, kind, dtype))
+    elif kind == "mlstm":
+        kk = jax.random.split(k1, 2)
+        p["conv"] = layers.conv1d_init(kk[0], d, CONV_WIDTH, dtype)
+        p["mlstm"] = xlstm.mlstm_init(kk[1], d, cfg.n_heads, cfg.head_dim,
+                                      dtype)
+    elif kind == "slstm":
+        p["slstm"] = xlstm.slstm_init(k1, d, cfg.n_heads, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def _window(cfg, kind):
+    return cfg.window if kind in ("local", "moe_swa") else None
+
+
+def block_apply(p, cfg, kind: str, x, positions, rope=None):
+    h = layers.rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+    if kind in ("attn", "local", "moe", "moe_swa"):
+        y = attention.attention_apply(
+            p["attn"], cfg, h, positions, window=_window(cfg, kind),
+            impl=cfg.attn_impl, q_chunk=cfg.attn_chunk,
+            k_chunk=cfg.attn_chunk, rope=rope)
+        x = x + y
+        h2 = layers.rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        x = x + _ffn_apply(p, cfg, kind, h2)
+    elif kind == "rglru":
+        a, _ = layers.conv1d_apply(p["conv"], layers.dense_apply(p["rx"], h))
+        a, _ = rglru.rglru_apply(p["rglru"], a)
+        g = jax.nn.gelu(layers.dense_apply(p["rgate"], h), approximate=True)
+        x = x + layers.dense_apply(p["rout"], a * g)
+        h2 = layers.rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        x = x + _ffn_apply(p, cfg, kind, h2)
+    elif kind == "mlstm":
+        a, _ = layers.conv1d_apply(p["conv"], h)
+        a = jax.nn.silu(a)
+        y, _ = xlstm.mlstm_chunkwise(p["mlstm"], a, cfg.n_heads, cfg.head_dim,
+                                     chunk=min(cfg.mlstm_chunk, x.shape[1]))
+        x = x + y
+    elif kind == "slstm":
+        y, _ = xlstm.slstm_apply(p["slstm"], h, cfg.n_heads)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return x
+
+
+def block_cache_init(cfg, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    d = cfg.d_model
+    if kind in ("attn", "moe"):
+        return attention.init_kv_cache(batch, cfg, max_len, window=None,
+                                       dtype=dtype)
+    if kind in ("local", "moe_swa"):
+        return attention.init_kv_cache(batch, cfg, max_len,
+                                       window=cfg.window, dtype=dtype)
+    if kind == "rglru":
+        return {"h": jnp.zeros((batch, d), jnp.float32),
+                "conv": jnp.zeros((batch, CONV_WIDTH - 1, d), dtype)}
+    if kind == "mlstm":
+        st = xlstm.mlstm_state_init(batch, cfg.n_heads, cfg.head_dim)
+        st["conv"] = jnp.zeros((batch, CONV_WIDTH - 1, d), dtype)
+        return st
+    if kind == "slstm":
+        return xlstm.slstm_state_init(batch, cfg.n_heads,
+                                      d // cfg.n_heads)
+    raise ValueError(kind)
+
+
+def block_decode(p, cfg, kind: str, x, cache, *, masked_write=False):
+    """x: (B, 1, d). Returns (y, new_cache)."""
+    h = layers.rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+    if kind in ("attn", "local", "moe", "moe_swa"):
+        y, cache = attention.attention_decode(p["attn"], cfg, h, cache,
+                                              window=_window(cfg, kind),
+                                              masked_write=masked_write)
+        x = x + y
+        h2 = layers.rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        x = x + _ffn_apply(p, cfg, kind, h2)
+        return x, cache
+    if kind == "rglru":
+        a = layers.dense_apply(p["rx"], h)
+        a, conv_state = layers.conv1d_apply(p["conv"], a,
+                                            state=cache["conv"])
+        a, h_state = rglru.rglru_step(p["rglru"], a, cache["h"])
+        g = jax.nn.gelu(layers.dense_apply(p["rgate"], h), approximate=True)
+        x = x + layers.dense_apply(p["rout"], a * g)
+        h2 = layers.rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        x = x + _ffn_apply(p, cfg, kind, h2)
+        return x, {"h": h_state, "conv": conv_state}
+    if kind == "mlstm":
+        a, conv_state = layers.conv1d_apply(p["conv"], h,
+                                            state=cache["conv"])
+        a = jax.nn.silu(a)
+        state = {k: cache[k] for k in ("C", "n", "m")}
+        y, state = xlstm.mlstm_recurrent(p["mlstm"], a, cfg.n_heads,
+                                         cfg.head_dim, state=state)
+        state["conv"] = conv_state
+        return x + y, state
+    if kind == "slstm":
+        y, state = xlstm.slstm_apply(p["slstm"], h, cfg.n_heads,
+                                     state=cache)
+        return x + y, state
+    raise ValueError(kind)

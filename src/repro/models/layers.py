@@ -1,0 +1,183 @@
+"""Pure-JAX building blocks (no flax): params are nested dicts.
+
+Every module is an (init, apply) pair. init returns a params pytree whose
+leaves are jnp arrays; apply is a pure function. Initializers are standard
+truncated-normal / zeros; dtype policy: params in `param_dtype` (fp32 by
+default), activations cast to `compute_dtype` (bf16 in production configs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / (in_dim ** 0.5)
+    p = {"w": jax.random.truncated_normal(key, -2, 2, (in_dim, out_dim),
+                                          dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": jax.random.truncated_normal(key, -2, 2, (vocab, dim),
+                                                 dtype)}
+
+
+def embed_apply(p, tokens, compute_dtype=jnp.float32, *,
+                method: str = "auto", chunk: int = 2048):
+    """Token embedding lookup.
+
+    method="onehot" computes one_hot(tokens) @ table — on a
+    vocab-sharded table this is a local matmul + psum, whereas a gather
+    forces GSPMD to replicate the whole table per use ("involuntary full
+    rematerialization"). The one-hot is built per `chunk` tokens inside a
+    scan so the (tokens, vocab) indicator never materialises (at 32k
+    prefill x 262k vocab it would be tens of GB). "auto" uses onehot for
+    vocab >= 8192 (sharded production tables) and the cheap gather for
+    tiny test vocabs.
+    """
+    table = p["table"]
+    if method == "auto":
+        method = "onehot" if table.shape[0] >= 8192 else "gather"
+    if method == "gather":
+        return table.astype(compute_dtype)[tokens]
+
+    tbl = table.astype(compute_dtype)
+    shape = tokens.shape
+    flat = tokens.reshape(-1)
+    N = flat.shape[0]
+    chunk = min(chunk, N)
+    pad = (-N) % chunk
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    blocks_ = flat.reshape(-1, chunk)
+
+    def body(_, idx):
+        oh = jax.nn.one_hot(idx, tbl.shape[0], dtype=compute_dtype)
+        return None, oh @ tbl
+
+    _, out = jax.lax.scan(body, None, blocks_)
+    out = out.reshape(-1, tbl.shape[1])[:N]
+    return out.reshape(*shape, tbl.shape[1])
+
+
+def embed_attend(p, x):
+    """Tied readout: logits = x @ table^T."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def rope_tables(positions, head_dim: int, theta: float = 10000.0,
+                dtype=jnp.float32):
+    """Precompute (cos, sin) once per forward — sharing them across all
+    layers removes per-layer f32 angle/trig transients (~GBs at 32k)."""
+    freqs = rope_frequencies(head_dim, theta)              # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rope(x, positions=None, theta: float = 10000.0, *, tables=None):
+    """x: (..., T, D); positions broadcastable to (..., T), or pass
+    precomputed `tables` = (cos, sin) with shape broadcastable to
+    (..., T, D/2). Rotation is done in x's dtype."""
+    D = x.shape[-1]
+    if tables is None:
+        tables = rope_tables(positions, D, theta, dtype=x.dtype)
+    cos, sin = tables
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, *, kind: str = "swiglu",
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+                "up": dense_init(k2, d_model, d_ff, dtype=dtype),
+                "down": dense_init(k3, d_ff, d_model, dtype=dtype)}
+    if kind == "gelu":
+        return {"up": dense_init(k1, d_model, d_ff, dtype=dtype),
+                "down": dense_init(k2, d_ff, d_model, dtype=dtype)}
+    raise ValueError(kind)
+
+
+def mlp_apply(p, x, *, kind: str = "swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(dense_apply(p["gate"], x)) * dense_apply(p["up"], x)
+    elif kind == "geglu":
+        h = jax.nn.gelu(dense_apply(p["gate"], x),
+                        approximate=True) * dense_apply(p["up"], x)
+    elif kind == "gelu":
+        h = jax.nn.gelu(dense_apply(p["up"], x), approximate=True)
+    else:
+        raise ValueError(kind)
+    return dense_apply(p["down"], h)
+
+
+def conv1d_init(key, dim: int, width: int = 4, dtype=jnp.float32):
+    """Depthwise causal temporal conv (Griffin / mLSTM front conv)."""
+    return {"w": jax.random.truncated_normal(key, -2, 2, (width, dim), dtype)
+            * (1.0 / width ** 0.5),
+            "b": jnp.zeros((dim,), dtype)}
+
+
+def conv1d_apply(p, x, state=None):
+    """x: (B, T, D). Causal depthwise conv. If `state` is given
+    ((B, width-1, D) trailing context), runs in streaming/decode mode and
+    returns (y, new_state)."""
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:-2] + (width - 1, x.shape[-1]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=-2)
+        new_state = xp[..., -(width - 1):, :] if width > 1 else None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=-2)
+        new_state = xp[..., -(width - 1):, :]
+    # y[t] = sum_k w[k] * xp[t + k]
+    T = x.shape[-2]
+    y = sum(w[k] * jax.lax.dynamic_slice_in_dim(xp, k, T, axis=-2)
+            for k in range(width))
+    y = y + p["b"].astype(x.dtype)
+    return y, new_state

@@ -1,0 +1,274 @@
+"""The composable decoder model: embeddings + pattern stack + head.
+
+Heterogeneous layer patterns (gemma3's 5:1 local:global, griffin's
+rglru/rglru/local, xlstm's mlstm/slstm) are handled by *period stacking*:
+one period = one pass through cfg.pattern; parameters for each pattern
+position are stacked across periods and the stack is a single lax.scan
+(small HLO, fast SPMD compile, natural remat boundary). Layers left over
+when n_layers % len(pattern) != 0 run unrolled ("remainder").
+
+Three modality frontends (DESIGN.md §Arch-applicability):
+  tokens       — embedding table (tied or untied readout)
+  embeds       — precomputed frame embeddings (musicgen stub)
+  patch_prefix — stub patch embeddings prefixed to token embeds
+                 (paligemma; a linear connector projects the patches)
+
+API:
+  init_params(cfg, key)                     -> params pytree
+  model_apply(params, cfg, batch)           -> (B, T, vocab) f32 logits
+  init_cache(cfg, batch, max_len)           -> decode cache pytree
+  model_decode(params, cfg, token, cache)   -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, layers
+
+
+class LanguageModel:
+    """Thin namespace bundling (cfg, params) for the examples/launchers."""
+
+    def __init__(self, cfg, params):
+        self.cfg = cfg
+        self.params = params
+
+    @classmethod
+    def create(cls, cfg, key, dtype=jnp.float32):
+        return cls(cfg, init_params(cfg, key, dtype))
+
+    def __call__(self, batch):
+        return model_apply(self.params, self.cfg, batch)
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    params = {}
+    if cfg.input_mode in ("tokens", "patch_prefix"):
+        params["embed"] = layers.embed_init(keys[0], cfg.vocab_size,
+                                            cfg.d_model, dtype)
+    if cfg.input_mode == "patch_prefix":
+        params["vision_proj"] = layers.dense_init(keys[1], cfg.d_model,
+                                                  cfg.d_model, dtype=dtype)
+    if cfg.input_mode == "embeds" or not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(keys[2], cfg.d_model,
+                                              cfg.vocab_size, dtype=dtype)
+    params["final_norm"] = layers.rmsnorm_init(cfg.d_model, dtype)
+
+    # Period-stacked blocks.
+    n_p = cfg.n_periods
+    if n_p > 0:
+        period = {}
+        for pos, kind in enumerate(cfg.pattern):
+            pkeys = jax.random.split(jax.random.fold_in(keys[3], pos), n_p)
+            period[f"pos{pos}"] = jax.vmap(
+                lambda k: blocks.block_init(k, cfg, kind, dtype))(pkeys)
+        params["periods"] = period
+    for ridx, kind in enumerate(cfg.remainder):
+        params[f"rem{ridx}"] = blocks.block_init(
+            jax.random.fold_in(keys[4], ridx), cfg, kind, dtype)
+    return params
+
+
+def _inputs_to_x(params, cfg, batch, compute_dtype):
+    """Returns (x (B,T,d), positions (B,T))."""
+    if cfg.input_mode == "tokens":
+        x = layers.embed_apply(params["embed"], batch["tokens"],
+                               compute_dtype)
+    elif cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(compute_dtype)
+    elif cfg.input_mode == "patch_prefix":
+        patches = layers.dense_apply(params["vision_proj"],
+                                     batch["patch_embeds"]
+                                     .astype(compute_dtype))
+        toks = layers.embed_apply(params["embed"], batch["tokens"],
+                                  compute_dtype)
+        x = jnp.concatenate([patches, toks], axis=1)
+    else:
+        raise ValueError(cfg.input_mode)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    B, T = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    return x, positions
+
+
+def _apply_period(params_period, cfg, x, positions, rope=None,
+                  remat_blocks=False):
+    for pos, kind in enumerate(cfg.pattern):
+        fn = functools.partial(blocks.block_apply, cfg=cfg, kind=kind,
+                               positions=positions, rope=rope)
+        if remat_blocks:
+            # Hierarchical remat: the outer period checkpoint replays the
+            # whole period forward during backward — without an inner
+            # per-block checkpoint, every layer's flash-attention scan
+            # carries stay live simultaneously (measured 25 GB/device on
+            # gemma3). Nested checkpoints bound the live set to one block.
+            fn = jax.checkpoint(fn)
+        x = fn(params_period[f"pos{pos}"], x=x)
+    return x
+
+
+def model_hidden(params, cfg, batch, *, compute_dtype=jnp.float32,
+                 act_spec=None):
+    """Forward pass up to the final norm -> hidden states (B, T, d).
+
+    Splitting the head off lets the loss evaluate logits in token chunks
+    (train.train_step.chunked_softmax_xent) — the full (tokens, vocab)
+    logits tensor for a 152k vocab at 65k tokens/device is ~40 GB and
+    must never be materialised.
+
+    act_spec: optional PartitionSpec pinned onto the residual stream at
+    every period boundary — Megatron-style sequence parallelism
+    (P(dp, "model", None)) turns the per-layer TP all-reduce into
+    reduce-scatter + all-gather and keeps the stored residuals 1/TP-size.
+    """
+    x, positions = _inputs_to_x(params, cfg, batch, compute_dtype)
+    # One shared RoPE table for every layer (per-layer recomputation costs
+    # ~GBs of f32 trig transients at 32k sequence length).
+    rope = layers.rope_tables(positions[:, None, :], cfg.head_dim,
+                              cfg.rope_theta, dtype=compute_dtype)
+
+    def constrain(t):
+        if act_spec is None:
+            return t
+        return jax.lax.with_sharding_constraint(t, act_spec)
+
+    x = constrain(x)
+
+    if cfg.n_periods > 0:
+        period_fn = functools.partial(_apply_period, cfg=cfg,
+                                      positions=positions, rope=rope,
+                                      remat_blocks=cfg.remat)
+        if cfg.remat:
+            period_fn_ = jax.checkpoint(
+                lambda pp, xx: constrain(period_fn(pp, x=xx)))
+        else:
+            period_fn_ = lambda pp, xx: constrain(period_fn(pp, x=xx))
+        if cfg.scan_layers and cfg.n_periods > 1:
+            def scan_body(xx, pp):
+                return period_fn_(pp, xx), None
+            x, _ = jax.lax.scan(scan_body, x, params["periods"])
+        else:
+            for i in range(cfg.n_periods):
+                pp = jax.tree.map(lambda a: a[i], params["periods"])
+                x = period_fn_(pp, x)
+
+    for ridx, kind in enumerate(cfg.remainder):
+        x = constrain(
+            blocks.block_apply(params[f"rem{ridx}"], cfg, kind, x,
+                               positions, rope=rope))
+
+    return layers.rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+
+
+def head_logits(params, x):
+    """Apply the LM head (untied dense or tied embedding) -> f32 logits."""
+    if "lm_head" in params:
+        logits = layers.dense_apply(params["lm_head"], x)
+    else:
+        logits = layers.embed_attend(params["embed"], x)
+    return logits.astype(jnp.float32)
+
+
+def model_apply(params, cfg, batch, *, compute_dtype=jnp.float32):
+    """Training / prefill forward pass -> f32 logits (B, T, vocab)."""
+    x = model_hidden(params, cfg, batch, compute_dtype=compute_dtype)
+    return head_logits(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    cache = {}
+    if cfg.n_periods > 0:
+        period = {}
+        for pos, kind in enumerate(cfg.pattern):
+            one = blocks.block_cache_init(cfg, kind, batch, max_len, dtype)
+            period[f"pos{pos}"] = jax.tree.map(
+                lambda a: jnp.stack([a] * cfg.n_periods), one)
+        cache["periods"] = period
+    for ridx, kind in enumerate(cfg.remainder):
+        cache[f"rem{ridx}"] = blocks.block_cache_init(cfg, kind, batch,
+                                                      max_len, dtype)
+    return cache
+
+
+def _decode_period(params_period, cache_period, cfg, x, masked_write=False):
+    new_cache = {}
+    for pos, kind in enumerate(cfg.pattern):
+        x, c = blocks.block_decode(params_period[f"pos{pos}"], cfg, kind, x,
+                                   cache_period[f"pos{pos}"],
+                                   masked_write=masked_write)
+        new_cache[f"pos{pos}"] = c
+    return x, new_cache
+
+
+def model_decode(params, cfg, batch, cache, *, compute_dtype=jnp.float32,
+                 masked_cache_write=False):
+    """One-token decode step.
+
+    batch: {"tokens": (B, 1)} (or {"embeds": (B, 1, d)}).
+    Returns (logits (B, 1, vocab) f32, new_cache).
+    """
+    if cfg.input_mode in ("tokens", "patch_prefix"):
+        x = layers.embed_apply(params["embed"], batch["tokens"],
+                               compute_dtype)
+    else:
+        x = batch["embeds"].astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+
+    new_cache = {}
+    if cfg.n_periods > 0:
+        if cfg.scan_layers and cfg.n_periods > 1:
+            # The cache rides in the scan CARRY and is updated in place
+            # with dynamic_update_index (aliasing-friendly). Passing it
+            # as xs/ys stages multiple full copies of the stacked KV
+            # cache (measured 6 x 2.4 GB on musicgen decode_32k).
+            def scan_body(carry, inp):
+                xx, call = carry
+                i, pp = inp
+                cc = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, i, 0, keepdims=False), call)
+                xx, nc = _decode_period(pp, cc, cfg, xx,
+                                        masked_write=masked_cache_write)
+                call = jax.tree.map(
+                    lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                        a, n.astype(a.dtype), i, 0), call, nc)
+                return (xx, call), None
+
+            idx = jnp.arange(cfg.n_periods, dtype=jnp.int32)
+            (x, ncp), _ = jax.lax.scan(scan_body, (x, cache["periods"]),
+                                       (idx, params["periods"]))
+            new_cache["periods"] = ncp
+        else:
+            ncs = []
+            for i in range(cfg.n_periods):
+                pp = jax.tree.map(lambda a: a[i], params["periods"])
+                cc = jax.tree.map(lambda a: a[i], cache["periods"])
+                x, nc = _decode_period(pp, cc, cfg, x,
+                                       masked_write=masked_cache_write)
+                ncs.append(nc)
+            new_cache["periods"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *ncs)
+
+    for ridx, kind in enumerate(cfg.remainder):
+        x, c = blocks.block_decode(params[f"rem{ridx}"], cfg, kind, x,
+                                   cache[f"rem{ridx}"],
+                                   masked_write=masked_cache_write)
+        new_cache[f"rem{ridx}"] = c
+
+    x = layers.rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+    if "lm_head" in params:
+        logits = layers.dense_apply(params["lm_head"], x)
+    else:
+        logits = layers.embed_attend(params["embed"], x)
+    return logits.astype(jnp.float32), new_cache

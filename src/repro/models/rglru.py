@@ -1,0 +1,71 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)              (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)              (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)    (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+A first-order linear recurrence in h -> parallelised over T with
+jax.lax.associative_scan on (a, b) pairs — the paper's "reshape the
+recurrence for a parallel substrate" insight applied to the hybrid
+architecture (DESIGN.md §4). Decode is the single-step update with h
+carried in the layer cache.
+
+The surrounding Griffin recurrent block is in blocks.py (conv1d + gating).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0
+_MAX_LOG = -8.0  # Lambda init range per Griffin: a in [0.9, 0.999]
+
+
+def rglru_init(key, dim: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Lambda parametrised via softplus s.t. a^(1/c) = sigmoid(lam) spread
+    # uniformly-ish; standard Griffin init.
+    lam = jax.random.uniform(k3, (dim,), dtype, 0.01, 0.5)
+    return {
+        "wa": layers.dense_init(k1, dim, dim, bias=True, dtype=dtype),
+        "wx": layers.dense_init(k2, dim, dim, bias=True, dtype=dtype),
+        "lam": lam,
+    }
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(layers.dense_apply(p["wa"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense_apply(p["wx"], x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-9)) * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_apply(p, x, h0=None):
+    """x: (B, T, D). Returns (y, h_last). Parallel associative scan."""
+    a, b = _gates(p, x)  # (B, T, D) each
+    if h0 is not None:
+        # Fold the incoming state into the first step: h_1 = a_1 h0 + b_1.
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_step(p, x, h):
+    """Single decode step. x: (B, 1, D); h: (B, D)."""
+    a, b = _gates(p, x)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new[:, None].astype(x.dtype), h_new

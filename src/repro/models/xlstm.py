@@ -1,0 +1,235 @@
+"""xLSTM mixers: chunkwise-parallel mLSTM and recurrent sLSTM.
+
+mLSTM (matrix-memory LSTM) is a linear-attention-style recurrence
+
+    m_t = max(f~_t + m_{t-1}, i~_t)                      (stabiliser)
+    f'_t = exp(f~_t + m_{t-1} - m_t);  i'_t = exp(i~_t - m_t)
+    C_t = f'_t C_{t-1} + i'_t k_t v_t^T                  (dk x dv state)
+    n_t = f'_t n_{t-1} + i'_t k_t
+    h_t = C_t^T q_t / max(|n_t . q_t|, exp(-m_t))
+
+We implement it two ways:
+  * `mlstm_recurrent` — exact lax.scan over time: the oracle, and the
+    decode step (O(1) state — this is why xlstm-125m runs the long_500k
+    shape).
+  * `mlstm_chunkwise` — the RAPIDx-style recurrence reshape (DESIGN.md
+    §4): within a chunk of length c the contribution is a masked
+    attention-like matmul (MXU work), across chunks a short scan carries
+    (C, n, m). Exact in infinite precision; validated against the oracle
+    in tests. Derivation: with b_r = cumsum(f~), w_s = i~_s - b_s,
+    g_r = runmax(w), M_r = max(m_0, g_r):
+        weight(r,s) = exp(w_s - M_r)  (s <= r)
+        inter scale = exp(m_0 - M_r)
+        m_{u,r} = b_r + M_r, and the chunk-end state uses M_c.
+
+sLSTM keeps the true nonlinear recurrence (R h_{t-1} feeds the gates), so
+it scans over time by construction — per-head block-diagonal recurrence as
+in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, n_heads: int, head_dim: int,
+               dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+    H, D = n_heads, head_dim
+    return {
+        "wq": layers.dense_init(keys[0], d_model, H * D, dtype=dtype),
+        "wk": layers.dense_init(keys[1], d_model, H * D, dtype=dtype),
+        "wv": layers.dense_init(keys[2], d_model, H * D, dtype=dtype),
+        "wi": layers.dense_init(keys[3], d_model, H, bias=True, dtype=dtype),
+        "wf": layers.dense_init(keys[4], d_model, H, bias=True, dtype=dtype),
+        "wo": layers.dense_init(keys[5], H * D, d_model, dtype=dtype),
+    }
+
+
+def _mlstm_qkv_gates(p, x, n_heads, head_dim):
+    B, T, _ = x.shape
+    H, D = n_heads, head_dim
+    q = layers.dense_apply(p["wq"], x).reshape(B, T, H, D).transpose(0, 2, 1, 3)
+    k = layers.dense_apply(p["wk"], x).reshape(B, T, H, D).transpose(0, 2, 1, 3)
+    v = layers.dense_apply(p["wv"], x).reshape(B, T, H, D).transpose(0, 2, 1, 3)
+    k = k / (D ** 0.5)
+    # Gate pre-activations (B, H, T); forget gate via log-sigmoid keeps
+    # f~ <= 0 (the standard stable parametrisation).
+    it = layers.dense_apply(p["wi"], x).transpose(0, 2, 1).astype(jnp.float32)
+    ft = jax.nn.log_sigmoid(
+        layers.dense_apply(p["wf"], x).astype(jnp.float32) + 1.0
+    ).transpose(0, 2, 1)
+    return (q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), it, ft)
+
+
+def mlstm_state_init(batch, n_heads, head_dim, dtype=jnp.float32):
+    H, D = n_heads, head_dim
+    return {
+        "C": jnp.zeros((batch, H, D, D), dtype),
+        "n": jnp.zeros((batch, H, D), dtype),
+        "m": jnp.zeros((batch, H), dtype),
+    }
+
+
+def mlstm_step(state, q, k, v, it, ft):
+    """One recurrent step. q/k/v: (B,H,D); it/ft: (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(ft + m, it)
+    fp = jnp.exp(ft + m - m_new)
+    ip = jnp.exp(it - m_new)
+    C_new = fp[..., None, None] * C + ip[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = fp[..., None] * n + ip[..., None] * k
+    h_tilde = jnp.einsum("bhkv,bhk->bhv", C_new, q)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)),
+                        jnp.exp(-m_new))
+    h = h_tilde / denom[..., None]
+    return {"C": C_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_recurrent(p, x, n_heads, head_dim, state=None):
+    """Oracle/exact path: scan over T. Returns (y (B,T,H*D->d), state)."""
+    B, T, _ = x.shape
+    H, D = n_heads, head_dim
+    q, k, v, it, ft = _mlstm_qkv_gates(p, x, H, D)
+    state = state or mlstm_state_init(B, H, D)
+
+    def step(s, inp):
+        qt, kt, vt, i_t, f_t = inp
+        s, h = mlstm_step(s, qt, kt, vt, i_t, f_t)
+        return s, h
+
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), it.transpose(2, 0, 1), ft.transpose(2, 0, 1))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, T, H * D)  # (B,T,H*D)
+    return layers.dense_apply(p["wo"], h.astype(x.dtype)), state
+
+
+def mlstm_chunkwise(p, x, n_heads, head_dim, state=None, chunk: int = 64):
+    """Chunk-parallel mLSTM (see module docstring). Returns (y, state)."""
+    B, T, _ = x.shape
+    H, D = n_heads, head_dim
+    if T % chunk:
+        raise ValueError(f"T={T} must be divisible by chunk={chunk}")
+    nc = T // chunk
+    q, k, v, it, ft = _mlstm_qkv_gates(p, x, H, D)
+
+    def split(a):  # (B,H,T,...) -> (nc, B, H, c, ...)
+        return a.reshape(a.shape[:2] + (nc, chunk) + a.shape[3:]) \
+                .transpose(2, 0, 1, 3, *range(4, a.ndim + 1))
+
+    qc, kc, vc = split(q), split(k), split(v)
+    ic, fc = split(it), split(ft)
+    state = state or mlstm_state_init(B, H, D)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(s, inp):
+        qu, ku, vu, iu, fu = inp          # (B,H,c,D) / (B,H,c)
+        C0, n0, m0 = s["C"], s["n"], s["m"]
+        b = jnp.cumsum(fu, axis=-1)       # (B,H,c)
+        w = iu - b                        # i~_s - b_s
+        g = jax.lax.cummax(w, axis=w.ndim - 1)
+        M = jnp.maximum(m0[..., None], g)          # (B,H,c) = M_r
+        # Intra-chunk banded weights: exp(w_s - M_r) on s <= r.
+        Dw = jnp.exp(w[..., None, :] - M[..., :, None])
+        Dw = jnp.where(mask, Dw, 0.0)              # (B,H,c,c)
+        S = jnp.einsum("bhrd,bhsd->bhrs", qu, ku)
+        intra = jnp.einsum("bhrs,bhsd->bhrd", Dw * S, vu)
+        inter_scale = jnp.exp(m0[..., None] - M)   # (B,H,c)
+        inter = jnp.einsum("bhrd,bhdv->bhrv", qu, C0) * inter_scale[..., None]
+        h_tilde = inter + intra
+        # Normaliser n_r . q_r.
+        n_intra = jnp.einsum("bhrs,bhsd->bhrd", Dw, ku)
+        n_r = n0[..., None, :] * inter_scale[..., None] + n_intra
+        dot = jnp.einsum("bhrd,bhrd->bhr", n_r, qu)
+        m_ur = b + M
+        denom = jnp.maximum(jnp.abs(dot), jnp.exp(-m_ur))
+        h = h_tilde / denom[..., None]
+        # Chunk-end state.
+        bc = b[..., -1:]                            # (B,H,1)
+        Mc = M[..., -1]                             # max(m0, g_c)
+        decay = jnp.exp(w - Mc[..., None])          # (B,H,c)
+        C1 = (jnp.exp(m0 - Mc)[..., None, None] * C0
+              + jnp.einsum("bhs,bhsk,bhsv->bhkv", decay, ku, vu))
+        n1 = (jnp.exp(m0 - Mc)[..., None] * n0
+              + jnp.einsum("bhs,bhsk->bhk", decay, ku))
+        m1 = bc[..., 0] + Mc
+        return {"C": C1, "n": n1, "m": m1}, h
+
+    state, hs = jax.lax.scan(chunk_step, state, (qc, kc, vc, ic, fc))
+    # hs: (nc, B, H, c, D) -> (B, T, H*D)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, T, H * D)
+    return layers.dense_apply(p["wo"], h.astype(x.dtype)), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    if d_model % n_heads:
+        raise ValueError("d_model must divide n_heads")
+    Dh = d_model // n_heads
+    keys = jax.random.split(key, 9)
+    p = {"wo": layers.dense_init(keys[8], d_model, d_model, dtype=dtype)}
+    for idx, gate in enumerate(("z", "i", "f", "o")):
+        p[f"w{gate}"] = layers.dense_init(keys[idx], d_model, d_model,
+                                          bias=True, dtype=dtype)
+        p[f"r{gate}"] = (jax.random.truncated_normal(
+            keys[4 + idx], -2, 2, (n_heads, Dh, Dh), dtype) * (Dh ** -0.5))
+    return p
+
+
+def slstm_state_init(batch, n_heads, head_dim, dtype=jnp.float32):
+    shape = (batch, n_heads, head_dim)
+    return {"h": jnp.zeros(shape, dtype), "c": jnp.zeros(shape, dtype),
+            "n": jnp.ones(shape, dtype), "m": jnp.zeros(shape, dtype)}
+
+
+def slstm_step(p, state, wx, n_heads, head_dim):
+    """wx: dict gate -> (B, H*Dh) precomputed W x_t contributions."""
+    H, Dh = n_heads, head_dim
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+
+    def gate(name):
+        rec = jnp.einsum("bhd,hde->bhe", h, p[f"r{name}"].astype(jnp.float32))
+        return wx[name].reshape(-1, H, Dh).astype(jnp.float32) + rec
+
+    z = jnp.tanh(gate("z"))
+    it = gate("i")
+    ft = gate("f") + 1.0
+    o = jax.nn.sigmoid(gate("o"))
+    m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(jax.nn.log_sigmoid(ft) + m - m_new)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_apply(p, x, n_heads, state=None):
+    """x: (B, T, d). True recurrence: scan over T."""
+    B, T, d = x.shape
+    H = n_heads
+    Dh = d // H
+    wx = {g: layers.dense_apply(p[f"w{g}"], x) for g in ("z", "i", "f", "o")}
+    state = state or slstm_state_init(B, H, Dh)
+
+    def step(s, t_in):
+        s = slstm_step(p, s, t_in, H, Dh)
+        return s, s["h"]
+
+    xs = {g: wx[g].transpose(1, 0, 2) for g in wx}
+    state, hs = jax.lax.scan(step, state, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, T, d)
+    return layers.dense_apply(p["wo"], h.astype(x.dtype)), state

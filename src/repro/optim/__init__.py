@@ -1,0 +1,4 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule, linear_warmup
+from repro.optim.grad_compress import (compress_int8, decompress_int8,
+                                       error_feedback_update)

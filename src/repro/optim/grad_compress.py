@@ -1,0 +1,44 @@
+"""int8 gradient compression with error feedback (cross-pod DP trick).
+
+For multi-pod training the inter-pod link (DCI) is the scarce resource;
+quantising the cross-pod gradient all-reduce to int8 cuts that traffic 4x
+vs f32 (2x vs bf16). Error feedback accumulates the quantisation residual
+locally and re-injects it next step, which keeps SGD/Adam convergence
+unbiased in practice (1-bit Adam / EF-SGD lineage).
+
+Usage inside a shard_map'd DP step (see train.train_step_compressed):
+
+    q, scale = compress_int8(g + err)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), "pod")
+    g_hat = decompress_int8(q_sum, scale_mean) / n_pods
+    err   = (g + err) - decompress_int8(q, scale)      # local residual
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g):
+    """Per-tensor symmetric int8 quantisation. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_update(g, err):
+    """Returns (quantised-with-feedback payload q, scale, new_err)."""
+    target = g.astype(jnp.float32) + err
+    q, scale = compress_int8(target)
+    new_err = target - decompress_int8(q, scale)
+    return q, scale, new_err
+
+
+def init_error_buffer(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

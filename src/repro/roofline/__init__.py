@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (HW, roofline_terms, analyze_record,
+                                     model_flops)
+from repro.roofline.hlo_collectives import collective_bytes_by_kind

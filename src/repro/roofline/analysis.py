@@ -1,0 +1,99 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e targets).
+
+  compute    = flops_per_device / PEAK_FLOPS
+  memory     = bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / LINK_BW
+
+(cost_analysis and the HLO collective inventory are per-participant, so
+the "/ chips" of the brief's total-quantity formulation is already folded
+in.) The dominant term is the bottleneck the §Perf loop iterates on.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per训-step token count;
+the ratio MODEL_FLOPS / HLO_FLOPS measures how much compiled compute is
+"useful" (remat recompute, attention waste, dispatch overhead all lower
+it). For decode steps the per-token model flops is 2*N_active (+ KV
+cache reads dominate the memory term instead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import SHAPES, get_config
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # B/s per chip
+    link_bw: float = 50e9           # B/s per ICI link
+
+
+HW = Hardware()
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float, hw: Hardware = HW):
+    terms = {
+        "compute_s": flops_per_device / hw.peak_flops,
+        "memory_s": bytes_per_device / hw.hbm_bw,
+        "collective_s": collective_bytes_per_device / hw.link_bw,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    # Perfect-overlap execution time = max(terms); roofline fraction of
+    # the dominant resource = its share assuming full overlap.
+    return {
+        **terms,
+        "dominant": dominant.removesuffix("_s"),
+        "step_time_overlap_s": bound,
+        "step_time_serial_s": total,
+        "overlap_efficiency": bound / total if total else 0.0,
+    }
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Useful model FLOPs per step per device-equivalent (6ND train /
+    2ND decode), using active params for MoE."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def analyze_record(record: dict, *, chips: int | None = None,
+                   hw: Hardware = HW) -> dict:
+    """Roofline analysis of one dryrun result record."""
+    if record.get("skipped") or record.get("status") != "ok":
+        return {"cell": f"{record.get('arch')}/{record.get('shape')}/"
+                        f"{record.get('mesh')}",
+                "status": record.get("skipped") or record.get("status")}
+    chips = chips or 1
+    for d in (record.get("mesh_shape") or []):
+        chips *= d
+    flops = record["flops_per_device"]
+    byts = record["bytes_accessed_per_device"]
+    coll = record["collectives"]["total_bytes"]
+    terms = roofline_terms(flops, byts, coll, hw)
+    out = {
+        "cell": f"{record['arch']}/{record['shape']}/{record['mesh']}",
+        "chips": chips,
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collective_bytes_per_device": coll,
+        **terms,
+    }
+    if record["arch"] != "rapidx-align":
+        mf = model_flops(record["arch"], record["shape"])
+        out["model_flops_total"] = mf
+        total_hlo = flops * chips
+        out["useful_flops_ratio"] = mf / total_hlo if total_hlo else 0.0
+        # Hardware utilisation if the step ran at the dominant-term time.
+        t = terms["step_time_overlap_s"]
+        out["mfu_bound"] = (mf / t) / (chips * hw.peak_flops) if t else 0.0
+    return out

@@ -1,0 +1,200 @@
+"""Closed-form roofline cost model per (arch x shape x mesh) cell.
+
+Why analytic: XLA's cost_analysis() counts while/scan BODIES once, not
+times trip count, so a scan-over-layers train step under-reports flops by
+~n_periods x microbatches (validated in EXPERIMENTS.md §Dry-run). The
+compiled artifact remains the source of truth for *memory fit* and the
+*collective inventory*; magnitudes here come from first principles with
+the execution strategy (microbatch count, FSDP gathers, TP reductions,
+masked cache writes) taken from the actual deploy configuration.
+
+Accounting conventions (flops = 2 x MACs):
+  * train pass multiplier: forward 1x + backward 2x + remat re-forward 1x.
+  * causal attention context: (S+1)/2 average; windowed: min(W, that).
+  * FSDP(data) all-gather: each device receives the full bf16 weight set
+    per pass per microbatch (ZeRO-3 semantics). MoE gathers ALL experts
+    (every expert is activated by some token in the batch).
+  * TP all-reduce: 2 per layer on the (tokens_local, d) activations
+    (attention out + FFN out), bf16, x2 ring factor, per pass.
+  * gradient reduce-scatter over data: ~P x 4B per device.
+  * decode with masked cache write rewrites the cache (3x traffic vs 1x).
+"""
+
+from __future__ import annotations
+
+from repro.configs import SHAPES, get_config
+from repro.launch.specs import microbatches_for
+from repro.roofline.analysis import HW, Hardware, roofline_terms
+
+
+def _layer_kinds(cfg):
+    for li in range(cfg.n_layers):
+        yield cfg.pattern[li % len(cfg.pattern)]
+
+
+def _per_token_layer_flops(cfg, kind, l_ctx):
+    d, f = cfg.d_model, cfg.d_ff
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    glu = 3 if cfg.mlp_kind in ("swiglu", "geglu") else 2
+    attn_proj = 2 * d * (Hq * Dh * 2 + Hkv * Dh * 2)
+    attn_score = 2 * 2 * l_ctx * Hq * Dh
+    mlp = 2 * glu * d * f
+    moe = (2 * 3 * d * cfg.moe_d_ff * cfg.moe_top_k
+           + 2 * d * cfg.moe_num_experts
+           + (2 * 3 * d * cfg.moe_shared_d_ff + 2 * d
+              if cfg.moe_shared_d_ff else 0))
+    if kind in ("attn", "local"):
+        return attn_proj + attn_score + mlp
+    if kind in ("moe", "moe_swa"):
+        return attn_proj + attn_score + moe
+    if kind == "rglru":
+        return 2 * 5 * d * d + 2 * 4 * d + mlp
+    if kind == "mlstm":
+        c = cfg.mlstm_chunk
+        proj = 2 * 4 * d * Hq * Dh
+        intra = 2 * 2 * c * Hq * Dh          # chunk-local attention
+        state = 2 * 2 * Dh * Dh * Hq / max(c, 1)  # amortised state update
+        return proj + intra + state
+    if kind == "slstm":
+        Dh_s = d // Hq
+        return 2 * (4 * d * d + 4 * d * Dh_s) + 2 * d * d
+    raise ValueError(kind)
+
+
+def _weight_bytes(cfg, active_only: bool, dtype_bytes: int = 2) -> float:
+    p = (cfg.active_param_count() if active_only else cfg.param_count())
+    return p * dtype_bytes
+
+
+def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
+    """Roofline for the rapidx-align cells (the paper's own workload).
+
+    Per wavefront step each lane does ~15 int32 VPU ops (Eq. 4 update +
+    masks + traceback encode); a pair of length L runs 2L steps over B
+    lanes. Traceback streams (2L x B) uint8 to HBM; sequences stream in
+    once. Collectives are zero by construction (tile independence).
+    """
+    L = record["length"]
+    B_band = record["band"]
+    batch = record["global_batch"]
+    chips = 1
+    for s in record.get("mesh_shape", [1]):
+        chips *= s
+    dp = chips  # alignment shards batch over every axis it can
+    pairs_dev = batch / min(dp, batch)
+    ops = 2 * L * B_band * 15  # int ops per pair
+    flops_dev = pairs_dev * ops
+    tb_bytes = 2 * L * B_band  # uint8 traceback plane per pair
+    seq_bytes = 2 * L * 4
+    bytes_dev = pairs_dev * (tb_bytes + seq_bytes)
+    terms = roofline_terms(flops_dev, bytes_dev, 0.0, hw)
+    return {
+        "cell": f"rapidx-align/{record['shape']}/{record.get('mesh', '?')}",
+        "chips": chips,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": 0.0,
+        **terms,
+        "pairs_per_s_per_chip_bound":
+            1.0 / max(terms["step_time_overlap_s"] / pairs_dev, 1e-30),
+    }
+
+
+def analytic_roofline(record: dict, hw: Hardware = HW) -> dict:
+    """record: a dryrun result (arch/shape/mesh + mesh_shape)."""
+    if record.get("arch") == "rapidx-align":
+        return alignment_roofline(record, hw)
+    arch, shape_name = record["arch"], record["shape"]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_shape = record.get("mesh_shape") or [16, 16]
+    chips = 1
+    for s in mesh_shape:
+        chips *= s
+    model_par = mesh_shape[-1]
+    dp = chips // model_par
+
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * (1 if shape.kind == "decode" else S)
+    tokens_dev = tokens / dp
+
+    # ---- FLOPs ----
+    l_full = (S + 1) / 2 if shape.kind != "decode" else min(S, 10**12)
+    flops_tok = 0.0
+    for kind in _layer_kinds(cfg):
+        w = cfg.window if kind in ("local", "moe_swa") else None
+        if shape.kind == "decode":
+            l_ctx = min(w, S) if w else S
+        else:
+            l_ctx = min(w, l_full) if w else l_full
+        flops_tok += _per_token_layer_flops(cfg, kind, l_ctx)
+    head = 2 * cfg.d_model * cfg.vocab_size
+    embed = head if (cfg.vocab_size >= 8192
+                     and cfg.input_mode != "embeds") else 0
+    flops_tok += head + embed
+    pass_mult = 4.0 if shape.kind == "train" else 1.0
+    flops_total = flops_tok * tokens * pass_mult
+    flops_dev = flops_total / chips
+
+    # ---- HBM bytes per device ----
+    nm = (microbatches_for(cfg, shape, dp) if shape.kind == "train" else 1)
+    passes = 3 if shape.kind == "train" else 1
+    wbytes = _weight_bytes(cfg, active_only=(shape.kind == "decode"))
+    weight_traffic = wbytes * passes * nm     # gathered per microbatch
+    act_traffic = tokens_dev * cfg.d_model * cfg.n_layers * 8 * passes
+    opt_traffic = (cfg.param_count() * (6 * 4) / chips
+                   if shape.kind == "train" else 0)
+    cache_traffic = 0.0
+    if shape.kind == "decode":
+        per_layer = 0.0
+        for kind in _layer_kinds(cfg):
+            if kind in ("attn", "moe"):
+                sl = S
+            elif kind in ("local", "moe_swa"):
+                sl = min(cfg.window, S)
+            else:
+                sl = 0  # recurrent state, negligible
+            per_layer += sl * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+        rw = 3.0 if record.get("masked_cache_write") else 1.0
+        cache_traffic = (B / dp) * per_layer * (1 + rw) / 2
+    bytes_dev = weight_traffic + act_traffic + opt_traffic + cache_traffic
+
+    # ---- collective bytes per device ----
+    # Calibrated against the compiled HLO inventory: on this XLA version
+    # GSPMD contracts matmuls over the FSDP-sharded dim IN PLACE (no
+    # per-use weight all-gather — verified on mixtral, where forcing the
+    # weights-stationary strategy changed nothing; EXPERIMENTS.md §Perf).
+    # Dominant volumes are therefore: 2 TP activation reductions per
+    # layer (x2 ring factor, bf16), the per-step gradient
+    # reduce-scatter, and the embedding/CE reductions.
+    coll = 0.0
+    act_red = 2 * tokens_dev * cfg.d_model * 2 * 2 * cfg.n_layers
+    if shape.kind == "train":
+        coll += act_red * passes
+        coll += cfg.param_count() * 4 / dp * 2   # grad reduce-scatter
+        coll += tokens_dev * 4 * 2               # CE logsumexp reductions
+    elif shape.kind == "prefill":
+        coll += act_red
+    else:  # decode
+        coll += 2 * (B / dp) * cfg.d_model * 2 * 2 * cfg.n_layers
+        # S- or head-sharded cache attention psum of scores/outputs.
+        coll += (B / dp) * cfg.n_heads * cfg.head_dim * 4 * cfg.n_layers
+
+    terms = roofline_terms(flops_dev, bytes_dev, coll, hw)
+    out = {
+        "cell": f"{arch}/{shape_name}/{record.get('mesh', '?')}",
+        "chips": chips,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll,
+        "microbatches": nm,
+        **terms,
+    }
+    # Useful-flops ratio and MFU bound.
+    n_active = cfg.active_param_count()
+    model_fl = (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+    out["model_flops_total"] = model_fl
+    out["useful_flops_ratio"] = model_fl / flops_total if flops_total else 0
+    t = terms["step_time_overlap_s"]
+    out["mfu_bound"] = (model_fl / t) / (chips * hw.peak_flops) if t else 0.0
+    return out

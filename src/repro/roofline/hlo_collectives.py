@@ -1,0 +1,63 @@
+"""Parse collective-op byte volumes out of optimized (post-SPMD) HLO text.
+
+cost_analysis() does not separate collective traffic, so we inventory
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the compiled module and sum their tensor bytes.
+The compiled module is one participant's program, so sums are
+*per-device* byte volumes (consistent with cost_analysis flops).
+"""
+
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = f32[16,4096]{1,0} all-gather(%param.4), ...
+#       %ar = (f32[8], f32[8]) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*(" + "|".join(_COLLECTIVES)
+    + r")(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_by_kind(hlo_text: str) -> dict:
+    """{kind: {'count': int, 'bytes': int}, 'total_bytes': int} per device.
+
+    Bytes are the op *output* tensor sizes (the volume crossing links, up
+    to the usual 2(N-1)/N ring factors which we fold into the link-bw
+    constant). -start/-done pairs are counted once (on -start).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        # skip -done duplicates: the matched text includes the suffix
+        after = hlo_text[m.end(2):m.end(2) + 6]
+        if after.startswith("-done"):
+            continue
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(shapes)
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out

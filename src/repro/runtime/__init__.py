@@ -1,0 +1,3 @@
+from repro.runtime.straggler import StepMonitor
+from repro.runtime.elastic import plan_mesh, reshard
+from repro.runtime.recovery import RecoveryPolicy, run_resilient_loop

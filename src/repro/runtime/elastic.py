@@ -1,0 +1,46 @@
+"""Elastic scaling: remesh planning + state resharding.
+
+When hosts die (or stragglers are evicted) the job restarts on a smaller
+device set; when capacity returns it scales back up. Because checkpoints
+are stored unsharded (checkpoint.py) and the sharding rules are pure
+functions of (pytree, mesh), resharding is: plan a new mesh -> recompute
+specs -> device_put. The data pipeline is stateless per (seed, step), so
+the resumed job replays the exact global batch sequence regardless of the
+new DP width (global batch is a model-quality invariant we preserve by
+keeping batch size fixed and rescaling per-device microbatches).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding.rules import param_specs
+
+
+def plan_mesh(num_devices: int, *, model_parallel: int = 16,
+              pods: int = 1, axis_names=("data", "model")):
+    """Largest (data, model) mesh fitting num_devices, honouring TP size.
+
+    Keeps "model" fixed (TP degree is a property of the checkpointed
+    layout's efficiency, not correctness) and shrinks/grows "data".
+    """
+    per_pod = num_devices // pods
+    data = per_pod // model_parallel
+    if data < 1:
+        raise ValueError(f"{num_devices} devices cannot host "
+                         f"model_parallel={model_parallel}")
+    shape = (pods, data, model_parallel) if pods > 1 else (data,
+                                                           model_parallel)
+    names = (("pod",) + tuple(axis_names)) if pods > 1 else tuple(axis_names)
+    devs = jax.devices()[:pods * data * model_parallel]
+    import numpy as np
+    return Mesh(np.array(devs).reshape(shape), names)
+
+
+def reshard(tree, new_mesh: Mesh):
+    """Re-place a (restored) pytree onto a new mesh per the rules."""
+    specs = param_specs(tree, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        tree, specs)

@@ -1,0 +1,2 @@
+from repro.sharding.rules import (batch_specs, cache_specs, param_specs,
+                                  train_state_specs)

@@ -1,0 +1,178 @@
+"""Sharding rules: FSDP("data") x TP("model") with divisibility fallback.
+
+Policy (DESIGN.md §5):
+  * Every 2-D weight is tensor-parallel on "model" along its
+    megatron-natural dim (column-parallel for up/gate/q/k/v projections
+    and embeddings' vocab dim; row-parallel for down/wo) and
+    FSDP-sharded on "data" along the other dim.
+  * A dim is sharded on an axis ONLY if its size divides the axis size —
+    otherwise that dim falls back to replication on that axis. This is
+    what lets e.g. paligemma's kv=1 attention or qwen2.5's 40 heads
+    coexist with a 16-way model axis: the flattened head*head_dim dims
+    are what we shard, and they are 128-multiples for every assigned
+    arch.
+  * Period-stacked parameters get a leading unsharded n_periods dim.
+  * The "pod" axis never shards parameters (pure DP across pods); the
+    batch shards over ("pod", "data").
+
+All functions return pytrees of PartitionSpec matching their input trees.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Parameter names whose 2-D weight is row-parallel (input dim on "model").
+_ROW_PARALLEL = {"wo", "down", "rout"}
+# Embedding-like tables: vocab dim on "model", feature dim on "data".
+_VOCAB_TABLES = {"table"}
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _key_name(k) -> str:
+    """Robust name for DictKey / GetAttrKey / SequenceKey path entries."""
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _leaf_spec(path_names, shape, data: int, model: int):
+    """PartitionSpec for one parameter leaf (unstacked shape)."""
+    name = path_names[-1] if path_names else ""
+    nd = len(shape)
+    if nd <= 1:
+        return P()  # norms, biases, scalars: replicate
+    parent = path_names[-2] if len(path_names) >= 2 else ""
+
+    def m(dim):  # "model" if divisible
+        return "model" if _div(shape[dim], model) else None
+
+    def d(dim):  # "data" (FSDP) if divisible
+        return "data" if _div(shape[dim], data) else None
+
+    if name in _VOCAB_TABLES:            # (vocab, d)
+        return P(m(0), d(1))
+    if name == "w" and parent in _ROW_PARALLEL:
+        specs = [None] * nd
+        specs[-2], specs[-1] = m(nd - 2), d(nd - 1)
+        return P(*specs)
+    if name == "w" or name in ("gate", "up", "down"):
+        # moe stacked experts come through as bare names (E, d, f)/(E, f, d)
+        specs = [None] * nd
+        if name == "down" and nd == 3:   # (E, f, d) row-parallel
+            specs[1], specs[2] = m(1), d(2)
+        elif nd == 3:                     # (E, d, f) column-parallel
+            specs[1], specs[2] = d(1), m(2)
+        else:                             # (d_in, d_out) column-parallel
+            specs[-2], specs[-1] = d(nd - 2), m(nd - 1)
+        return P(*specs)
+    if nd == 3 and name.startswith("r") and len(shape) == 3:
+        # sLSTM per-head recurrent (H, Dh, Dh): shard heads if divisible
+        return P(m(0), None, None)
+    # Generic 2-D fallback: column-parallel.
+    specs = [None] * nd
+    specs[-2], specs[-1] = d(nd - 2), m(nd - 1)
+    return P(*specs)
+
+
+def param_specs(params, mesh):
+    """PartitionSpecs for a model/optimizer param pytree."""
+    sizes = _axis_sizes(mesh)
+    data = sizes.get("data", 1)
+    model = sizes.get("model", 1)
+
+    def spec(path, leaf):
+        names = [_key_name(k) for k in path]
+        stacked = "periods" in names
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        base = _leaf_spec(names, shape, data, model)
+        return P(None, *base) if stacked else base
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def train_state_specs(params, opt_state, mesh):
+    pspecs = param_specs(params, mesh)
+    return {
+        "m": pspecs,
+        "v": pspecs,
+        "step": P(),
+    }
+
+
+def batch_specs(batch_tree, mesh, *, batch_axes=None):
+    """Shard dim 0 (global batch) of every input over the DP axes."""
+    if batch_axes is None:
+        batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    sizes = _axis_sizes(mesh)
+    total = 1
+    for a in batch_axes:
+        total *= sizes[a]
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % total == 0:
+            return P(batch_axes, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_specs(cache_tree, mesh, *, batch: int):
+    """KV/recurrent cache sharding for decode.
+
+    batch >= data-axis size: shard batch over "data" (+"pod").
+    batch == 1 (long-context): shard the *sequence* dim of KV caches over
+    "data" instead — sequence parallelism for the 500k cache.
+    """
+    sizes = _axis_sizes(mesh)
+    data = sizes.get("data", 1)
+    model = sizes.get("model", 1)
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_total = 1
+    for a in dp_axes:
+        dp_total *= sizes[a]
+
+    def spec(path, leaf):
+        names = [_key_name(k) for k in path]
+        stacked = "periods" in names
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            base = P()
+        elif nd == 4 and names and names[-1] in ("k", "v", "0", "1"):
+            # KV cache (B, Hkv, S, D). Always consume the "model" axis:
+            # via kv heads when divisible, else via the sequence dim —
+            # otherwise 32k x batch caches exceed per-chip HBM.
+            h_spec = "model" if _div(shape[1], model) else None
+            s_spec = None if h_spec else (
+                "model" if _div(shape[2], model) else None)
+            if shape[0] % dp_total == 0:
+                base = P(dp_axes, h_spec, s_spec, None)
+            else:
+                # batch==1 long-context: sequence-parallel over "data"
+                # (and "model" if heads don't shard).
+                base = P(None, h_spec,
+                         ("data",) + ((s_spec,) if s_spec else ())
+                         if _div(shape[2], data) else s_spec,
+                         None)
+        else:
+            # Recurrent states / conv states: batch over data if divisible.
+            first = dp_axes if shape[0] % dp_total == 0 else None
+            base = P(first, *([None] * (nd - 1)))
+        return P(None, *base) if stacked else base
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)

@@ -1,0 +1,88 @@
+"""Cross-pod data parallelism with int8-compressed gradient all-reduce.
+
+shard_map over the "pod" axis: each pod computes full grads (its model
+replica), quantises them with error feedback, psums the int8 payload
+across pods, and applies AdamW to the dequantised mean. Model is
+replicated across pods (the "pod" axis is pure DP by design) so the only
+inter-pod traffic is the 4x-compressed gradient.
+
+Demonstrated/tested on replicated-model configs; for FSDP/TP-sharded
+params the same transform applies per-shard (the quantiser is local).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import adamw_update
+from repro.optim.grad_compress import error_feedback_update, decompress_int8
+from repro.optim.schedules import cosine_schedule
+from repro.train.train_step import loss_fn
+
+
+def make_compressed_train_step(cfg, mesh, *, peak_lr=3e-4, warmup_steps=100,
+                               total_steps=10_000,
+                               compute_dtype=jnp.bfloat16):
+    """Returns step(state_tree, batch) for meshes with a 'pod' axis."""
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    other_axes = tuple(a for a in mesh.axis_names if a != "pod")
+
+    def local_step(state, batch):
+        params, opt, err = state["params"], state["opt"], state["err"]
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, cfg, batch, compute_dtype=compute_dtype)
+        # Average within the pod over remaining DP axes (if the batch is
+        # additionally sharded over "data", grads already carry the psum
+        # from autodiff; here the model is replicated so we reduce
+        # explicitly).
+        if other_axes:
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g, other_axes), grads)
+            loss = jax.lax.pmean(loss, other_axes)
+
+        def reduce_leaf(g, e):
+            q, scale, e_new = error_feedback_update(g, e)
+            q_sum = jax.lax.psum(q.astype(jnp.int32), "pod")
+            scale_mean = jax.lax.pmean(scale, "pod")
+            g_hat = decompress_int8(q_sum, scale_mean) / n_pods
+            return g_hat.astype(g.dtype), e_new
+
+        flat, treedef = jax.tree.flatten(grads)
+        eflat = jax.tree.leaves(err)
+        reduced, new_err = [], []
+        for g, e in zip(flat, eflat):
+            gh, en = reduce_leaf(g, e)
+            reduced.append(gh)
+            new_err.append(en)
+        grads = jax.tree.unflatten(treedef, reduced)
+        err = jax.tree.unflatten(treedef, new_err)
+
+        lr = cosine_schedule(opt["step"], peak_lr=peak_lr,
+                             warmup_steps=warmup_steps,
+                             total_steps=total_steps)
+        params, opt, om = adamw_update(params, grads, opt, lr=lr)
+        loss = jax.lax.pmean(loss, "pod")
+        return ({"params": params, "opt": opt, "err": err},
+                {"loss": loss, "lr": lr, **om})
+
+    state_spec = jax.tree.map(lambda _: P(), {"params": 0, "opt": 0,
+                                              "err": 0})
+    # Replicated state; batch sharded over every DP axis.
+    batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+    def step(state, batch):
+        state_specs = jax.tree.map(lambda _: P(), state)
+        bspecs = jax.tree.map(
+            lambda x: P(batch_axes, *([None] * (x.ndim - 1))), batch)
+        out_specs = (state_specs,
+                     jax.tree.map(lambda _: P(), {"loss": 0, "lr": 0,
+                                                  "grad_norm": 0}))
+        fn = shard_map(local_step, mesh=mesh,
+                       in_specs=(state_specs, bspecs),
+                       out_specs=out_specs, check_vma=False)
+        return fn(state, batch)
+
+    return step

@@ -1,0 +1,217 @@
+"""pjit-able training / prefill / decode steps.
+
+train_step features (DESIGN.md §5):
+  * microbatch gradient accumulation (lax.scan) so every assigned
+    (arch x shape) cell fits 16 GB/chip — microbatch count is a static
+    knob chosen per cell by the launcher;
+  * bf16 compute with fp32 params/optimizer (cast at use);
+  * global-norm clipping + AdamW + cosine schedule;
+  * donates params/opt state (in-place buffers on TPU).
+
+The cross-pod int8-compressed DP variant lives in
+train.compressed (shard_map; replicated-model DP only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.optim import adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+    def tree(self):
+        return {"params": self.params, "opt": self.opt}
+
+
+def init_train_state(cfg, key, dtype=jnp.float32,
+                     moments_dtype=None) -> TrainState:
+    params = model_lib.init_params(cfg, key, dtype)
+    return TrainState(params=params,
+                      opt=adamw_init(params, moments_dtype))
+
+
+def _cast_params(params, dtype):
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating)
+        else p, params)
+
+
+def chunked_softmax_xent(head_params, x, labels, *, chunk: int = 1024):
+    """Memory-efficient cross entropy: logits are computed per token
+    chunk inside a remat'd scan, so the (tokens, vocab) tensor is never
+    materialised (a 152k vocab at 65k tokens/device is ~40 GB — this is
+    the single biggest memory lever in the whole train step).
+
+    x: (B, T, d) final hidden states; labels: (B, T). Returns mean NLL.
+    """
+    B, T, d = x.shape
+    N = B * T
+    xf = x.reshape(N, d)
+    lf = labels.reshape(N)
+    chunk = min(chunk, N)
+    pad = (-N) % chunk
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d), xf.dtype)])
+        lf = jnp.concatenate([lf, jnp.zeros((pad,), lf.dtype)])
+    mask = (jnp.arange(N + pad) < N).astype(jnp.float32)
+    nb = (N + pad) // chunk
+    xb = xf.reshape(nb, chunk, d)
+    lb = lf.reshape(nb, chunk)
+    mb = mask.reshape(nb, chunk)
+
+    @jax.checkpoint
+    def block_nll(xc, lc, mc):
+        logits = model_lib.head_logits(head_params, xc)       # (chunk, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+        return jnp.sum((lse - gold) * mc)
+
+    def body(acc, inp):
+        xc, lc, mc = inp
+        return acc + block_nll(xc, lc, mc), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xb, lb, mb))
+    return total / N
+
+
+def loss_fn(params, cfg, batch, *, compute_dtype=jnp.bfloat16,
+            xent_chunk: int = 1024, act_spec=None):
+    """Next-token cross entropy. batch must carry 'labels' (B, T_out)."""
+    cparams = _cast_params(params, compute_dtype)
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    hidden = model_lib.model_hidden(cparams, cfg, inputs,
+                                    compute_dtype=compute_dtype,
+                                    act_spec=act_spec)
+    labels = batch["labels"]
+    # Align lengths: with a patch prefix the hidden states cover
+    # prefix+tokens; labels only cover the token tail.
+    T_out = labels.shape[1]
+    hidden = hidden[:, -T_out:]
+    head_params = {k: cparams[k] for k in ("lm_head", "embed")
+                   if k in cparams}
+    return chunked_softmax_xent(head_params, hidden, labels,
+                                chunk=xent_chunk)
+
+
+def make_train_step(cfg, *, num_microbatches: int = 1,
+                    peak_lr: float = 3e-4, warmup_steps: int = 100,
+                    total_steps: int = 10_000,
+                    compute_dtype=jnp.bfloat16, donate: bool = True,
+                    act_spec=None, batch_spec=None, accum_dtype=None):
+    """Returns train_step(state_tree, batch) -> (state_tree, metrics).
+
+    When num_microbatches > 1 the batch must arrive PRE-SPLIT as
+    (nm, B/nm, ...) — split on the host (data pipeline) or via
+    split_microbatches(). Reshaping inside jit loses the pod-axis batch
+    sharding through GSPMD propagation (measured 2x per-device
+    flops/memory on the multipod mesh); a pre-split input carries an
+    explicit (None, dp_axes, ...) sharding instead.
+    """
+
+    def step(state, batch):
+        params, opt = state["params"], state["opt"]
+        nm = num_microbatches
+
+        if nm == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, cfg, batch, compute_dtype=compute_dtype,
+                act_spec=act_spec)
+        else:
+            # accum_dtype=bf16 halves the two gradient buffers (carry +
+            # per-micro) — the §Perf lever that buys a smaller nm, which
+            # in turn halves the per-step ZeRO weight-regather volume.
+            adt = accum_dtype
+
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(
+                    params, cfg, mb, compute_dtype=compute_dtype,
+                    act_spec=act_spec)
+                if adt is not None:
+                    grads = jax.tree.map(lambda g: g.astype(adt), grads)
+                return (jax.tree.map(jnp.add, g_acc, grads),
+                        l_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p_: jnp.zeros(p_.shape, adt or p_.dtype), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / nm,
+                                 grads)
+            loss = loss / nm
+
+        lr = cosine_schedule(opt["step"], peak_lr=peak_lr,
+                             warmup_steps=warmup_steps,
+                             total_steps=total_steps)
+        params, opt, om = adamw_update(params, grads, opt, lr=lr)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return {"params": params, "opt": opt}, metrics
+
+    return step
+
+
+def split_microbatches(batch, nm: int):
+    """Host-side microbatch split: (B, ...) -> (nm, B/nm, ...), strided so
+    every microbatch spans all DP shards (sample k -> micro k % nm)."""
+    if nm == 1:
+        return batch
+    return jax.tree.map(
+        lambda x: x.reshape((x.shape[0] // nm, nm) + x.shape[1:])
+                   .swapaxes(0, 1),
+        batch)
+
+
+def make_prefill_step(cfg, *, compute_dtype=jnp.bfloat16,
+                      last_only: bool = True, act_spec=None):
+    """Inference prefill: full-sequence forward.
+
+    last_only=True returns only the final position's logits (what a
+    serving engine needs to start decoding) — materialising the full
+    (B, 32k, vocab) f32 logits tensor is ~40 GB/device and is never
+    needed in a prefill. last_only=False keeps all positions (scoring).
+    """
+    # Remat is a backward-pass tool; in a forward-only prefill the
+    # checkpoint optimization barriers just pin every layer's buffers
+    # (measured 141 GB/device on gemma3-27b prefill_32k). Disable it.
+    import dataclasses as _dc
+    cfg = _dc.replace(cfg, remat=False)
+
+    def prefill(params, batch):
+        cparams = _cast_params(params, compute_dtype)
+        hidden = model_lib.model_hidden(cparams, cfg, batch,
+                                        compute_dtype=compute_dtype,
+                                        act_spec=act_spec)
+        if last_only:
+            hidden = hidden[:, -1:]
+        return model_lib.head_logits(cparams, hidden)
+
+    return prefill
+
+
+def make_serve_step(cfg, *, compute_dtype=jnp.bfloat16,
+                    masked_cache_write: bool = False):
+    """One-token decode: (params, token_batch, cache) -> (logits, cache).
+
+    masked_cache_write: use the shard-friendly cache update (see
+    models.attention.attention_decode) — set when the cache's sequence
+    dim is sharded (kv heads don't divide the model axis).
+    """
+
+    def serve(params, batch, cache):
+        cparams = _cast_params(params, compute_dtype)
+        return model_lib.model_decode(
+            cparams, cfg, batch, cache, compute_dtype=compute_dtype,
+            masked_cache_write=masked_cache_write)
+
+    return serve

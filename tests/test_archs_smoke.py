@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + a few decode steps on CPU; asserts shapes and finiteness.
+(The FULL configs are exercised only via the dry-run, per the brief.)
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import init_cache, init_params, model_apply, model_decode
+from repro.train.train_step import make_train_step, split_microbatches
+from repro.train import init_train_state
+
+ARCHS = list_archs()
+
+
+def _batch_for(cfg, key, B=2, T=32, with_labels=False):
+    batch = {}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = jax.random.normal(key, (B, T, cfg.d_model))
+        t_out = T
+    elif cfg.input_mode == "patch_prefix":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.num_prefix, cfg.d_model))
+        batch["tokens"] = jax.random.randint(
+            key, (B, T - cfg.num_prefix), 0, cfg.vocab_size)
+        t_out = T - cfg.num_prefix
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+        t_out = T
+    if with_labels:
+        batch["labels"] = jax.random.randint(key, (B, t_out), 0,
+                                             cfg.vocab_size)
+    return batch, t_out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch, _ = _batch_for(cfg, key)
+    logits = model_apply(params, cfg, batch)
+    T = 32
+    assert logits.shape == (2, T, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_reduces_and_stays_finite(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    state = init_train_state(cfg, key).tree()
+    step = jax.jit(make_train_step(cfg, num_microbatches=2, peak_lr=1e-3,
+                                   compute_dtype=jnp.float32))
+    batch, _ = _batch_for(cfg, key, with_labels=True)
+    batch = split_microbatches(batch, 2)
+    state, m1 = step(state, batch)
+    state, m2 = step(state, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    # Same batch twice: the second step should not be (much) worse.
+    assert float(m2["loss"]) <= float(m1["loss"]) * 1.2
+    assert int(state["opt"]["step"]) == 2
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_steps(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    B = 2
+    cache = init_cache(cfg, B, max_len=16, dtype=jnp.float32)
+    for step_idx in range(3):
+        if cfg.input_mode == "embeds":
+            batch = {"embeds": jax.random.normal(
+                jax.random.fold_in(key, step_idx), (B, 1, cfg.d_model))}
+        else:
+            batch = {"tokens": jnp.full((B, 1), step_idx % cfg.vocab_size,
+                                        jnp.int32)}
+        logits, cache = model_decode(params, cfg, batch, cache)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ["gemma3-27b", "recurrentgemma-9b",
+                                  "xlstm-125m", "qwen2.5-14b"])
+def test_decode_matches_forward_teacher_forcing(arch):
+    """Per-token decode must reproduce the training forward's logits
+    (validates caches, ring buffers, recurrent states, RoPE offsets).
+
+    MoE archs are exact only when no token is capacity-dropped: the
+    batched forward applies a per-batch expert capacity while decode
+    routes one token at a time — a real, documented semantic difference
+    (capacity dropping), so they are covered by test_decode_steps and
+    test_moe_token_chunking_is_exact instead.
+    """
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    B, T = 1, 12
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    ref = model_apply(params, cfg, {"tokens": toks})  # (B, T, V)
+    cache = init_cache(cfg, B, max_len=T, dtype=jnp.float32)
+    outs = []
+    for t in range(T):
+        lg, cache = model_decode(params, cfg, {"tokens": toks[:, t:t + 1]},
+                                 cache)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10

@@ -1,0 +1,70 @@
+"""Banded alignment accuracy vs the full-DP oracle on simulated reads —
+the Table V mechanism (full sweep lives in benchmarks/)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import MINIMAP2, banded_align_batch, full_dp_score
+from repro.core.scoring import adaptive_bandwidth
+from repro.data.genome import ERROR_PROFILES, ReadSimulator, random_genome, \
+    simulate_read_pairs
+
+
+def _accuracy(profile, read_len, npairs, band, adaptive, seed=5):
+    q, r, n, m = simulate_read_pairs(npairs, read_len, profile, seed=seed)
+    oracle = np.array([full_dp_score(q[i][:n[i]], r[i][:m[i]], MINIMAP2)
+                       for i in range(npairs)])
+    out = banded_align_batch(jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
+                             jnp.asarray(m), sc=MINIMAP2, band=band,
+                             adaptive=adaptive, collect_tb=False)
+    got = np.asarray(out["score"])
+    assert (got <= oracle).all(), "banded must never beat the oracle"
+    return float((got == oracle).mean())
+
+
+def test_short_reads_full_accuracy():
+    B = adaptive_bandwidth(150, 10)
+    assert _accuracy("illumina", 150, 12, B, adaptive=True) == 1.0
+
+
+def test_long_reads_adaptive_beats_fixed():
+    acc_adaptive = _accuracy("ont_2d", 1200, 8, band=10, adaptive=True)
+    acc_fixed = _accuracy("ont_2d", 1200, 8, band=10, adaptive=False)
+    assert acc_adaptive >= 0.9
+    assert acc_adaptive > acc_fixed  # Table V's central claim
+
+
+def test_bandwidth_function():
+    # B = min(w + 0.01 L, 100), rounded up to a multiple of w.
+    assert adaptive_bandwidth(100, 10) == 20
+    assert adaptive_bandwidth(2000, 30) == 60
+    assert adaptive_bandwidth(50000, 30) == 100  # cap
+
+
+def test_error_profiles_match_table2():
+    for name, rates in ERROR_PROFILES.items():
+        total = sum(rates.values())
+        expected = {"pacbio": 0.15, "ont_2d": 0.30, "illumina": 0.05}[name]
+        assert abs(total - expected) < 1e-9
+
+
+def test_read_simulator_reproducible():
+    g = random_genome(10_000, seed=1)
+    s1 = ReadSimulator(g, "pacbio", seed=2)
+    s2 = ReadSimulator(g, "pacbio", seed=2)
+    for _ in range(3):
+        r1, q1 = s1.sample(200)
+        r2, q2 = s2.sample(200)
+        np.testing.assert_array_equal(r1, r2)
+        np.testing.assert_array_equal(q1, q2)
+
+
+def test_simulated_error_rate_in_band():
+    g = random_genome(200_000, seed=3)
+    sim = ReadSimulator(g, "ont_2d", seed=4)
+    ref, read = sim.sample(20_000)
+    from repro.core import levenshtein_reference
+    # Use a window to keep the O(nm) oracle affordable.
+    d = levenshtein_reference(read[:800], ref[:800])
+    assert 0.10 < d / 800 < 0.45  # ~30% nominal, loose band

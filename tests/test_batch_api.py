@@ -1,0 +1,81 @@
+"""Host batching/bucketing API + edit-distance mode + serve/prefill steps."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (EDIT_DISTANCE, MINIMAP2, AlignmentBatch, align_batch,
+                        edit_distance, full_dp_score, levenshtein_reference)
+from repro.data.genome import ReadSimulator, random_genome
+from repro.train.train_step import make_prefill_step, make_serve_step
+from repro.models import init_cache, init_params
+
+
+def _reads(n, L, profile="illumina", seed=0):
+    sim = ReadSimulator(random_genome(50_000, seed=seed), profile,
+                        seed=seed + 1)
+    refs, reads = [], []
+    for _ in range(n):
+        ref, read = sim.sample(L)
+        refs.append(ref)
+        reads.append(read)
+    return reads, refs
+
+
+def test_alignment_batch_bucket_and_dispatch():
+    reads, refs = _reads(10, 120)
+    batch = AlignmentBatch.from_lists(reads, refs, capacity=4)
+    assert batch.q_pad.shape[0] % 4 == 0
+    out = align_batch(batch, MINIMAP2)
+    scores = out["score"][:10]
+    oracle = [full_dp_score(reads[i], refs[i], MINIMAP2) for i in range(10)]
+    assert (scores == np.asarray(oracle)).mean() >= 0.9
+
+
+def test_edit_distance_matches_levenshtein():
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        a = rng.integers(0, 4, rng.integers(5, 60)).astype(np.int8)
+        b = rng.integers(0, 4, rng.integers(5, 60)).astype(np.int8)
+        d, _ = edit_distance(a, b, band=max(len(a), len(b)) + 2)
+        assert d == levenshtein_reference(a, b)
+
+
+def test_edit_distance_traceback_consistency():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 4, 40).astype(np.int8)
+    b = a.copy()
+    b[10] = (b[10] + 1) % 4  # one substitution
+    d, cigar = edit_distance(a, b, band=48, with_traceback=True)
+    assert d == 1
+    ops = {op for op, _ in cigar}
+    assert ops == {"M"}
+
+
+def test_prefill_step_last_logits():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_step(cfg, compute_dtype=jnp.float32))
+    toks = jnp.zeros((2, 32), jnp.int32)
+    logits = prefill(params, {"tokens": toks})
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_serve_step_masked_write_equivalence():
+    """Masked cache write must produce identical logits to DUS."""
+    cfg = get_config("qwen2.5-14b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    s1 = jax.jit(make_serve_step(cfg, compute_dtype=jnp.float32,
+                                 masked_cache_write=False))
+    s2 = jax.jit(make_serve_step(cfg, compute_dtype=jnp.float32,
+                                 masked_cache_write=True))
+    c1 = init_cache(cfg, 2, max_len=8, dtype=jnp.float32)
+    c2 = init_cache(cfg, 2, max_len=8, dtype=jnp.float32)
+    for t in range(4):
+        batch = {"tokens": jnp.full((2, 1), t, jnp.int32)}
+        l1, c1 = s1(params, batch, c1)
+        l2, c2 = s2(params, batch, c2)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   atol=1e-5, rtol=1e-5)

@@ -1,0 +1,80 @@
+"""Hypothesis property tests for the paper's bit-width invariants.
+
+Paper §III-B / §IV-B: after the Eq. (4) shift, every wavefront quantity
+lies in [0, M + 2o + 2e] for ANY sequences and ANY affine scoring — the
+fixed-precision claim that turns 32-bit DP into 5-bit (3-bit for edit
+distance). We fuzz sequences AND scoring parameters.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EDIT_DISTANCE, MINIMAP2, ScoringConfig, diff_dp, \
+    full_dp_matrices, range_report
+
+seq = st.lists(st.integers(0, 3), min_size=1, max_size=24)
+scoring = st.builds(
+    ScoringConfig,
+    match=st.integers(0, 4),
+    mismatch=st.integers(0, 6),
+    gap_open=st.integers(0, 8),
+    gap_extend=st.integers(1, 4),
+    name=st.just("fuzz"),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(q=seq, r=seq, sc=scoring)
+def test_shifted_quantities_fit_declared_range(q, r, sc):
+    res = diff_dp(np.array(q, np.int8), np.array(r, np.int8), sc)
+    rep = range_report(res, sc)
+    for key in ("A'", "dH'", "dV'", "dE'", "dF'"):
+        assert rep[key]["within"], (key, rep)
+
+
+@settings(max_examples=60, deadline=None)
+@given(q=seq, r=seq, sc=scoring)
+def test_diff_dp_score_matches_oracle(q, r, sc):
+    qa = np.array(q, np.int8)
+    ra = np.array(r, np.int8)
+    assert diff_dp(qa, ra, sc).score == full_dp_matrices(qa, ra, sc).score
+
+
+@settings(max_examples=40, deadline=None)
+@given(q=seq, r=seq)
+def test_edit_distance_range_is_3bit(q, r):
+    res = diff_dp(np.array(q, np.int8), np.array(r, np.int8), EDIT_DISTANCE)
+    rep = range_report(res, EDIT_DISTANCE)
+    assert rep["allowed"]["bits"] <= 3  # paper §V-D2
+    for key in ("A'", "dH'", "dV'", "dE'", "dF'"):
+        assert rep[key]["within"]
+
+
+def test_minimap2_preset_is_5bit_or_less():
+    # ceil(log2(M + 2o + 2e + 1)) = ceil(log2(15)) = 4 magnitude bits;
+    # the paper provisions 5. Either way it fits int8 storage.
+    assert MINIMAP2.required_bits <= 5
+
+
+@settings(max_examples=30, deadline=None)
+@given(q=seq, r=seq)
+def test_score_upper_bound_property(q, r):
+    """Optimal score never exceeds match * min(n, m)."""
+    qa = np.array(q, np.int8)
+    ra = np.array(r, np.int8)
+    sc = MINIMAP2
+    assert full_dp_matrices(qa, ra, sc).score <= sc.match * min(len(q),
+                                                                len(r))
+
+
+@settings(max_examples=30, deadline=None)
+@given(q=seq, r=seq)
+def test_edit_distance_triangle_vs_lengths(q, r):
+    """d(q, r) <= max(n, m); d >= |n - m| (classic Levenshtein bounds)."""
+    from repro.core import levenshtein_reference
+    qa = np.array(q, np.int8)
+    ra = np.array(r, np.int8)
+    d = levenshtein_reference(qa, ra)
+    assert abs(len(q) - len(r)) <= d <= max(len(q), len(r))
+    # And the affine formulation with edit scoring agrees.
+    assert full_dp_matrices(qa, ra, EDIT_DISTANCE).score == -d

@@ -1,0 +1,142 @@
+"""Fault tolerance, checkpointing, elastic resharding, stragglers,
+gradient compression, schedules — the large-scale runnability layer."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.optim.grad_compress import (compress_int8, decompress_int8,
+                                       error_feedback_update,
+                                       init_error_buffer)
+from repro.optim.schedules import cosine_schedule
+from repro.runtime import RecoveryPolicy, StepMonitor, run_resilient_loop
+from repro.runtime.elastic import plan_mesh, reshard
+from repro.train import init_train_state
+from repro.train.train_step import make_train_step
+
+
+def _tiny_setup(steps=30):
+    cfg = get_config("qwen3-0.6b").reduced()
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, batch_size=4,
+                         seq_len=32, seed=1)
+    state = init_train_state(cfg, jax.random.PRNGKey(0)).tree()
+    step_fn = jax.jit(make_train_step(cfg, num_microbatches=1,
+                                      peak_lr=1e-3,
+                                      compute_dtype=jnp.float32,
+                                      total_steps=steps))
+
+    def data_fn(step):
+        toks = jnp.asarray(pipe.batch(step)["tokens"])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    return cfg, state, step_fn, data_fn
+
+
+def test_checkpoint_roundtrip_and_atomicity():
+    cfg, state, _, _ = _tiny_setup()
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 3, state, metadata={"note": "x"})
+        assert latest_step(d) == 3
+        restored, meta = restore(d, state)
+        assert meta["step"] == 3
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # No .tmp residue (atomic rename).
+        assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+
+
+def test_checkpoint_manager_retention_and_async():
+    cfg, state, _, _ = _tiny_setup()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep_last=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, state)
+        mgr.wait()
+        assert latest_step(d, all_steps=True) == [3, 4]
+
+
+def test_checkpoint_template_mismatch_fails_loudly():
+    cfg, state, _, _ = _tiny_setup()
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 0, {"a": np.zeros(3)})
+        with pytest.raises(ValueError, match="mismatch"):
+            restore(d, {"b": np.zeros(3)})
+
+
+def test_recovery_loop_rolls_back_on_nan():
+    cfg, state, step_fn, data_fn = _tiny_setup()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep_last=3)
+        state, hist = run_resilient_loop(
+            state, step_fn, data_fn, num_steps=24, manager=mgr,
+            policy=RecoveryPolicy(ckpt_every=8),
+            fail_at={13}, log=lambda s: None)
+        assert hist["rollbacks"] == 1
+        assert hist["skipped"] == [13]
+        assert len(hist["loss"]) >= 22  # all steps except the faulty one
+        assert all(np.isfinite(l) for l in hist["loss"])
+
+
+def test_straggler_monitor_flags_and_evicts():
+    mon = StepMonitor(threshold=2.0, window=16, max_strikes=2, num_hosts=4)
+    for i in range(10):
+        mon.stop(i, host=0, duration=1.0)
+    assert mon.stop(10, host=3, duration=5.0) is not None
+    assert mon.stop(11, host=3, duration=4.5) is not None
+    assert mon.hosts_to_evict() == [3]
+    assert mon.stop(12, host=1, duration=1.1) is None
+
+
+def test_elastic_remesh_and_reshard():
+    cfg, state, _, _ = _tiny_setup()
+    mesh = plan_mesh(1, model_parallel=1)
+    params2 = reshard(state["params"], mesh)
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(params2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_compression_error_feedback_converges():
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    err = jnp.zeros_like(g_true)
+    # Accumulated dequantised gradient approaches the accumulated true
+    # gradient thanks to error feedback.
+    acc_hat = jnp.zeros_like(g_true)
+    for _ in range(50):
+        q, scale, err = error_feedback_update(g_true, err)
+        acc_hat = acc_hat + decompress_int8(q, scale)
+    rel = float(jnp.linalg.norm(acc_hat / 50 - g_true)
+                / jnp.linalg.norm(g_true))
+    assert rel < 1e-2
+
+
+def test_int8_roundtrip_bounds():
+    x = jnp.asarray([-3.0, 0.0, 1.5, 3.0])
+    q, s = compress_int8(x)
+    back = decompress_int8(q, s)
+    assert float(jnp.abs(back - x).max()) <= float(s) / 2 + 1e-6
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(s, peak_lr=1.0, warmup_steps=10,
+                                 total_steps=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0      # warmup
+    assert abs(lrs[10] - 1.0) < 0.05   # peak
+    assert lrs[-1] < 0.2               # decay
+    assert min(lrs) >= 0.0
+
+
+def test_token_pipeline_deterministic_and_learnable():
+    p1 = TokenPipeline(vocab_size=64, batch_size=2, seq_len=16, seed=3)
+    p2 = TokenPipeline(vocab_size=64, batch_size=2, seq_len=16, seed=3)
+    np.testing.assert_array_equal(p1.batch(7)["tokens"],
+                                  p2.batch(7)["tokens"])
+    assert not np.array_equal(p1.batch(7)["tokens"], p1.batch(8)["tokens"])
