@@ -11,12 +11,12 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core import MINIMAP2, banded_align_batch, full_dp_matrices
+from repro.core import MINIMAP2, AlignmentEngine, full_dp_matrices
 from repro.core.pim_model import RapidxChip, fig11_summary
 from repro.data.genome import simulate_read_pairs
 
 
-def run():
+def run(smoke=False):
     s = fig11_summary()
     emit("fig11/pim_model/latency", s["rapidx_cycles"],
          f"ratio={s['latency_ratio']:.2f}x;paper=5.5x;"
@@ -32,14 +32,14 @@ def run():
 
     # Software-side confirmation: measured full-DP vs banded-parallel
     # runtime ratio on identical pairs (algorithmic speedup only).
-    L, NP = 2048, 4
+    L, NP = (256, 2) if smoke else (2048, 4)
     q, r, n, m = simulate_read_pairs(NP, L, "pacbio", seed=41)
     us_full = time_fn(lambda: [full_dp_matrices(q[i][:n[i]], r[i][:m[i]],
                                                 MINIMAP2)
                                for i in range(NP)], warmup=0, iters=2)
+    eng = AlignmentEngine(backend="reference", sc=MINIMAP2)
     args = (jnp.asarray(q), jnp.asarray(r), jnp.asarray(n), jnp.asarray(m))
-    us_band = time_fn(lambda: banded_align_batch(
-        *args, sc=MINIMAP2, band=50, adaptive=True,
-        collect_tb=False)["score"])
+    us_band = time_fn(lambda: eng.align_arrays(
+        *args, band=50, collect_tb=False)["score"])
     emit("fig11/measured_algorithmic_speedup", us_band / NP,
          f"full_dp_us={us_full / NP:.0f};speedup={us_full / us_band:.1f}x")

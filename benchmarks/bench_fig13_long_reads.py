@@ -9,28 +9,29 @@ baselines (ABSW fixed B=128 @12bit; GenASM). We reproduce:
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core import MINIMAP2, banded_align_batch
+from repro.core import MINIMAP2, AlignmentEngine
 from repro.core.pim_model import RapidxChip
 from repro.core.scoring import adaptive_bandwidth
 from repro.data.genome import simulate_read_pairs
 
 
-def run():
+def run(smoke=False):
     chip = RapidxChip()
-    for L in (2048, 10_240):
-        NP = 4
+    eng = AlignmentEngine(backend="reference", sc=MINIMAP2)
+    eng_fixed = AlignmentEngine(backend="reference", sc=MINIMAP2,
+                                adaptive=False)
+    for L in ((1024,) if smoke else (2048, 10_240)):
+        NP = 2 if smoke else 4
         q, r, n, m = simulate_read_pairs(NP, L, "pacbio", seed=61)
         args = (jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
                 jnp.asarray(m))
         B = adaptive_bandwidth(L, 30)
-        us_ad = time_fn(lambda: banded_align_batch(
-            *args, sc=MINIMAP2, band=B, adaptive=True,
-            collect_tb=False)["score"], iters=2)
+        us_ad = time_fn(lambda: eng.align_arrays(
+            *args, band=B, collect_tb=False)["score"], iters=2)
         emit(f"fig13/jax_adaptive/L{L}", us_ad / NP,
              f"reads_per_s={NP / (us_ad / 1e6):.3g};B={B}")
-        us_absw = time_fn(lambda: banded_align_batch(
-            *args, sc=MINIMAP2, band=128, adaptive=False,
-            collect_tb=False)["score"], iters=2)
+        us_absw = time_fn(lambda: eng_fixed.align_arrays(
+            *args, band=128, collect_tb=False)["score"], iters=2)
         emit(f"fig13/absw_style_fixed128/L{L}", us_absw / NP,
              f"reads_per_s={NP / (us_absw / 1e6):.3g};"
              f"adaptive_speedup={us_absw / us_ad:.2f}x")

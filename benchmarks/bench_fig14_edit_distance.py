@@ -1,32 +1,44 @@
 """Paper Fig. 14: edit-distance throughput with / without traceback
 (RAPIDx vs Edlib; 141-321x with TB, 56-149x without). We reproduce the
 reconfigurable-precision mode (3-bit scoring config on the same engine)
-and the with/without-traceback throughput split.
+and the with/without-traceback throughput split, on both execution
+backends of the AlignmentEngine — the collect_tb=False rows exercise the
+kernel's score-only fast path (no TBM traffic).
 """
 
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core import EDIT_DISTANCE
-from repro.core.banded import banded_align_batch
+from repro.core import edit_distance_batch
 from repro.core.pim_model import RAPIDX_EDIT_BITS, RapidxChip
 from repro.core.scoring import adaptive_bandwidth
 from repro.data.genome import simulate_read_pairs
 
+#: Interpret-mode wavefronts scale with n+m; keep the pallas rows to the
+#: short-read cases so the benchmark stays affordable on CPU.
+PALLAS_MAX_LEN = 256
 
-def run():
+
+def run(backends=("reference", "pallas"), smoke=False):
     chip = RapidxChip()
-    for L, NP in ((100, 64), (1024, 16), (10_240, 2)):
+    cases = ((100, 8),) if smoke else ((100, 64), (1024, 16), (10_240, 2))
+    for L, NP in cases:
         q, r, n, m = simulate_read_pairs(NP, L, "illumina", seed=71)
         args = (jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
                 jnp.asarray(m))
         B = adaptive_bandwidth(L, 10)
-        for tb in (False, True):
-            us = time_fn(lambda: banded_align_batch(
-                *args, sc=EDIT_DISTANCE, band=B, adaptive=True,
-                collect_tb=tb)["score"], iters=2)
-            emit(f"fig14/jax/L{L}/{'tb' if tb else 'no_tb'}", us / NP,
-                 f"pairs_per_s={NP / (us / 1e6):.3g};B={B}")
+        for backend in backends:
+            if backend == "pallas" and L > PALLAS_MAX_LEN:
+                continue
+            opts = ({"batch_tile": 8, "chunk": 64}
+                    if backend == "pallas" else None)
+            for tb in (False, True):
+                us = time_fn(lambda: edit_distance_batch(
+                    *args, band=B, with_traceback=tb, backend=backend,
+                    backend_opts=opts)["distance"],
+                    iters=1 if smoke else 2)
+                emit(f"fig14/{backend}/L{L}/{'tb' if tb else 'no_tb'}",
+                     us / NP, f"pairs_per_s={NP / (us / 1e6):.3g};B={B}")
         proj = chip.reads_per_second(L, B, bits=RAPIDX_EDIT_BITS,
                                      traceback=True)
         emit(f"fig14/rapidx_projected/L{L}", 1e6 / proj,

@@ -18,10 +18,10 @@ from repro.data.genome import simulate_read_pairs
 from repro.kernels.banded_dp.ops import banded_align_kernel_batch
 
 
-def run():
+def run(smoke=False):
     chip = RapidxChip()
     # Fig. 9: k vs t for several read lengths (paper plots 2k..10kbp).
-    for L in (2048, 4096, 8192, 10_240):
+    for L in ((2048,) if smoke else (2048, 4096, 8192, 10_240)):
         ks = []
         for t in (1, 3, 7, 11, 15):
             chip_t = RapidxChip(tbms_per_tile=t)
@@ -30,10 +30,12 @@ def run():
              "k_at_t1_3_7_11_15=" + "/".join(map(str, ks)))
 
     # Fig. 10: block-shape sweep on the wavefront kernel.
-    L, NP = 256, 16
+    L, NP = (64, 4) if smoke else (256, 16)
     q, r, n, m = simulate_read_pairs(NP, L, "illumina", seed=81)
     base = None
-    for bt, band in ((2, 16), (4, 16), (8, 16), (4, 32), (8, 32), (8, 64)):
+    shapes = (((2, 16), (4, 16)) if smoke
+              else ((2, 16), (4, 16), (8, 16), (4, 32), (8, 32), (8, 64)))
+    for bt, band in shapes:
         us = time_fn(lambda: banded_align_kernel_batch(
             q, r, n, m, sc=MINIMAP2, band=band, batch_tile=bt,
             chunk=64)["score"], warmup=1, iters=2)

@@ -13,13 +13,13 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core import MINIMAP2, banded_align_batch, full_dp_matrices
+from repro.core import MINIMAP2, AlignmentEngine, full_dp_matrices
 from repro.core.scoring import adaptive_bandwidth
 from repro.data.genome import simulate_read_pairs
 
 
-def run():
-    L, NP = 1024, 8
+def run(smoke=False):
+    L, NP = (192, 2) if smoke else (1024, 8)
     q, r, n, m = simulate_read_pairs(NP, L, "pacbio", seed=21)
     B = adaptive_bandwidth(L, 30)
 
@@ -30,9 +30,10 @@ def run():
     emit("table1/full_dp", us_full / NP,
          f"cells_per_s={cells_full / (us_full / 1e6):.3g};critical=5x32bit")
 
+    eng = AlignmentEngine(backend="reference", sc=MINIMAP2)
     args = (jnp.asarray(q), jnp.asarray(r), jnp.asarray(n), jnp.asarray(m))
-    us_band = time_fn(lambda: banded_align_batch(
-        *args, sc=MINIMAP2, band=B, adaptive=True, collect_tb=False)["score"])
+    us_band = time_fn(lambda: eng.align_arrays(
+        *args, band=B, collect_tb=False)["score"])
     cells_band = float(np.sum((n + m).astype(np.float64) * B))
     emit("table1/adaptive_banded_parallel", us_band / NP,
          f"cells_per_s={cells_band / (us_band / 1e6):.3g};B={B};"

@@ -25,9 +25,13 @@ def _acc(q, r, n, m, oracle, band, adaptive):
     return float((np.asarray(out["score"]) == oracle).mean())
 
 
-def run(num_pairs: int = 10):
-    cases = [("illumina", 250, (10, 20, 30)),
-             ("ont_2d", 5000, (10, 20, 30, 40, 50))]
+def run(num_pairs: int = 10, smoke=False):
+    if smoke:
+        num_pairs = 2
+        cases = [("illumina", 150, (10,))]
+    else:
+        cases = [("illumina", 250, (10, 20, 30)),
+                 ("ont_2d", 5000, (10, 20, 30, 40, 50))]
     for profile, L, ws in cases:
         q, r, n, m = simulate_read_pairs(num_pairs, L, profile, seed=31)
         oracle = np.array([full_dp_score(q[i][:n[i]], r[i][:m[i]], MINIMAP2)

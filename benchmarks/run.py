@@ -11,10 +11,16 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig14    — edit distance w/ and w/o traceback       (paper Fig. 14)
   roofline — per-cell roofline terms from the dry-run (EXPERIMENTS §Roofline)
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only substr]
+Usage: PYTHONPATH=src python -m benchmarks.run
+         [--only substr] [--smoke] [--backend {reference,pallas,both}]
+
+--smoke runs one tiny config per benchmark (CI sanity, CPU, ~1 min);
+--backend narrows the alignment-throughput benchmarks (fig12/fig14) to a
+single AlignmentEngine execution backend (default: report both).
 """
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -36,9 +42,25 @@ MODULES = [
 ]
 
 
+def _kwargs_for(mod, args) -> dict:
+    """Forward --smoke/--backend to modules whose run() accepts them."""
+    params = inspect.signature(mod.run).parameters
+    kw = {}
+    if "smoke" in params and args.smoke:
+        kw["smoke"] = True
+    if "backends" in params and args.backend != "both":
+        kw["backends"] = (args.backend,)
+    return kw
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny config per benchmark (CI sanity)")
+    ap.add_argument("--backend", default="both",
+                    choices=["reference", "pallas", "both"],
+                    help="engine backend for fig12/fig14 rows")
     args = ap.parse_args()
     header()
     failed = []
@@ -46,7 +68,7 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         try:
-            mod.run()
+            mod.run(**_kwargs_for(mod, args))
         except Exception:
             failed.append(name)
             traceback.print_exc()

@@ -1,15 +1,17 @@
 """Quickstart: align two DNA sequences with the RAPIDx adaptive banded
-parallelized DP and print the alignment.
+parallelized DP — through the AlignmentEngine, the one entry point over
+the reference (lax.scan) and Pallas-kernel execution backends — and print
+the alignment.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [backend]
+
+backend: reference | pallas | auto (default auto).
 """
 
-import numpy as np
-import jax.numpy as jnp
+import sys
 
-from repro.core import (MINIMAP2, banded_align, cigar_score, decode, encode,
-                        full_dp_score, traceback_banded)
-from repro.core.scoring import adaptive_bandwidth
+from repro.core import (MINIMAP2, AlignmentEngine, cigar_score, decode,
+                        encode, full_dp_score)
 
 
 def pretty(q, r, cigar):
@@ -37,20 +39,20 @@ def pretty(q, r, cigar):
 
 
 def main():
+    backend = sys.argv[1] if len(sys.argv) > 1 else "auto"
     reference = encode("ACGTCCGGTTAACGGAGTCCAGTTACGGTTAACCTGA")
     query = encode("ACGTCCGGTTACGGAGTCAAGTTACGGTTTTAACCTGA")
 
-    band = adaptive_bandwidth(max(len(query), len(reference)), 10)
-    out = banded_align(jnp.asarray(query), jnp.asarray(reference),
-                       len(query), len(reference),
-                       sc=MINIMAP2, band=band)
-    score = int(out["score"])
-    cigar = traceback_banded(np.asarray(out["tb"]), np.asarray(out["los"]),
-                             len(query), len(reference), band)
+    engine = AlignmentEngine(backend=backend, sc=MINIMAP2)
+    out = engine.align([query], [reference], collect_tb=True)
+    score = int(out["score"][0])
+    cigar = out["cigars"][0]
 
     print(f"query     : {decode(query)}")
     print(f"reference : {decode(reference)}")
-    print(f"band B    : {band} (adaptive: B = min(w + 0.01L, 100))")
+    print(f"backend   : {engine.backend_name}")
+    print(f"band B    : {int(out['band'][0])} "
+          f"(adaptive: B = min(w + 0.01L, 100))")
     print(f"score     : {score} (full-DP oracle: "
           f"{full_dp_score(query, reference, MINIMAP2)})")
     print(f"CIGAR     : " + "".join(f"{l}{op}" for op, l in cigar))

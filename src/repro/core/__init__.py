@@ -8,8 +8,12 @@ from repro.core.full_dp import (FullDPResult, cigar_score, full_dp_align,
                                 traceback_full)
 from repro.core.diff_dp import DiffDPResult, diff_dp, range_report, serial_eq2
 from repro.core.banded import (banded_align, banded_align_batch,
-                               traceback_banded)
-from repro.core.batch import AlignmentBatch, BucketSpec, align_batch, make_bucket
+                               traceback_banded, traceback_banded_batch)
+from repro.core.batch import (AlignmentBatch, BucketSpec, DispatchGroup,
+                              align_batch, make_bucket, plan_buckets)
 from repro.core.edit_distance import (edit_distance, edit_distance_batch,
                                       levenshtein_reference)
+from repro.core.backends import (available_backends, get_backend,
+                                 resolve_backend)
+from repro.core.engine import AlignmentEngine
 from repro.core import pim_model

@@ -1,0 +1,66 @@
+"""Execution backends for the AlignmentEngine.
+
+A backend is the compute-memory of the host/accelerator split (paper
+Fig. 2a): the engine plans length-bucketed dispatch groups and a backend
+executes one padded, single-length-class group. Every backend honours one
+contract (see DESIGN.md §3):
+
+    run(q_pad, r_pad, n, m, *, sc, band, adaptive, collect_tb, mode)
+      -> dict with (N,) int32 'score', 'final_lo', 'best_score',
+         'best_i', 'best_j'; plus 'tb' ((N, T, B) uint8) and 'los'
+         ((N, T+1) int32) when collect_tb.
+
+`run` must be jax-traceable (it is called under jit / shard_map by
+`core.distributed`). Results are bit-identical across backends — integer
+DP, asserted by tests/test_engine.py.
+
+Backends register lazily by module path so importing the registry never
+drags in pallas for reference-only users.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_LAZY_BACKENDS = {
+    "reference": "repro.core.backends.reference",
+    "pallas": "repro.core.backends.pallas",
+}
+_INSTANCES: dict[str, object] = {}
+
+
+def available_backends() -> tuple[str, ...]:
+    """Backend names accepted by `get_backend` (plus 'auto')."""
+    return tuple(_LAZY_BACKENDS)
+
+
+def resolve_backend(name: str) -> str:
+    """Map 'auto' to a concrete backend: the Pallas kernel when a TPU is
+    attached (compiled mode), the XLA reference path otherwise (the kernel
+    only runs in interpret mode on CPU, which is strictly slower)."""
+    if name != "auto":
+        return name
+    import jax
+    platforms = {d.platform for d in jax.devices()}
+    return "pallas" if "tpu" in platforms else "reference"
+
+
+def get_backend(name="auto", **opts):
+    """Instantiate (and cache the no-option instance of) a backend.
+
+    An already-constructed backend (anything with a `run` method) passes
+    through unchanged; `opts` apply only when constructing by name.
+    """
+    if hasattr(name, "run"):
+        return name
+    name = resolve_backend(name)
+    if name not in _LAZY_BACKENDS:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}")
+    if not opts and name in _INSTANCES:
+        return _INSTANCES[name]
+    mod = importlib.import_module(_LAZY_BACKENDS[name])
+    backend = mod.BACKEND(**opts)
+    if not opts:
+        _INSTANCES[name] = backend
+    return backend

@@ -1,0 +1,38 @@
+"""Pallas backend: the in-VMEM wavefront kernel (kernels.banded_dp).
+
+The TPU compute-memory analogue of the RAPIDx CM array. On CPU hosts the
+kernel runs in interpret mode (bit-exact, for validation); on TPU it
+compiles. `interpret=None` picks automatically from the attached devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.kernels.banded_dp.ops import banded_align_kernel_batch
+
+
+def _default_interpret() -> bool:
+    return not any(d.platform == "tpu" for d in jax.devices())
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend:
+    name = "pallas"
+    batch_tile: int = 8
+    chunk: int = 128
+    interpret: bool | None = None
+
+    def run(self, q_pad, r_pad, n, m, *, sc, band, adaptive=True,
+            collect_tb=True, mode="global"):
+        interpret = (self.interpret if self.interpret is not None
+                     else _default_interpret())
+        return banded_align_kernel_batch(
+            q_pad, r_pad, n, m, sc=sc, band=band, adaptive=adaptive,
+            collect_tb=collect_tb, mode=mode, batch_tile=self.batch_tile,
+            chunk=self.chunk, interpret=interpret)
+
+
+BACKEND = PallasBackend

@@ -1,0 +1,25 @@
+"""Reference backend: the vmapped `lax.scan` wavefront (core.banded).
+
+The paper-faithful XLA path — the oracle every other backend must match
+bit-exactly (integer DP). This is the default on CPU/GPU hosts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import banded
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceBackend:
+    name = "reference"
+
+    def run(self, q_pad, r_pad, n, m, *, sc, band, adaptive=True,
+            collect_tb=True, mode="global"):
+        return banded.banded_align_batch(q_pad, r_pad, n, m, sc=sc,
+                                         band=band, adaptive=adaptive,
+                                         collect_tb=collect_tb, mode=mode)
+
+
+BACKEND = ReferenceBackend

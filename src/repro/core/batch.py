@@ -2,10 +2,15 @@
 
 The paper batches kt (segments x tiles) sequence pairs per dispatch; the
 host groups reads by length so each ReRAM segment's band width matches.
-Here: bucket by padded length, pick the adaptive band per bucket
-(B = min(w + 0.01 L, 100), §IV-B1), pad, and run the vmapped wavefront.
+Here: bucket by padded length class, pick the adaptive band per class
+(B = min(w + 0.01 L, 100), §IV-B1), pad, and run the selected backend.
 Work is split into fixed-capacity "dispatch" groups so XLA compiles one
 program per (bucket shape, band) — mirroring the fixed CM geometry.
+
+`plan_buckets` is the multi-bucket scheduler: it partitions a ragged
+request into per-length-class `DispatchGroup`s, each remembering the
+caller positions of its members so results scatter back into the original
+read order (see `core.engine.AlignmentEngine`).
 """
 
 from __future__ import annotations
@@ -16,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import banded
+from repro.core.backends import get_backend
 from repro.core.scoring import ScoringConfig, MINIMAP2, adaptive_bandwidth
 
 
@@ -37,25 +43,92 @@ def _round_up(x: int, edges=DEFAULT_BUCKET_EDGES) -> int:
     return int(2 ** np.ceil(np.log2(max(x, 1))))
 
 
+def default_base_bandwidth(L: int, base_bandwidth: int | None = None) -> int:
+    """Base bandwidth w for a length class (§VI-B: 10 short / 30 long),
+    unless the caller pins one. Shared policy of make_bucket,
+    plan_buckets, and the engine."""
+    if base_bandwidth is not None:
+        return base_bandwidth
+    return 10 if L <= 1024 else 30
+
+
 def make_bucket(q_lens, r_lens, *, base_bandwidth: int | None = None,
                 capacity: int = 64) -> BucketSpec:
-    """Bucket spec for a set of reads (single length class)."""
+    """Bucket spec for a set of reads forced into ONE length class.
+
+    Prefer `plan_buckets` — it keeps length classes separate so short
+    reads never pay the longest read's padded geometry.
+    """
     q_len = _round_up(int(np.max(q_lens)))
     r_len = _round_up(int(np.max(r_lens)))
     L = max(q_len, r_len)
-    w = base_bandwidth if base_bandwidth is not None else (10 if L <= 1024 else 30)
+    w = default_base_bandwidth(L, base_bandwidth)
     return BucketSpec(q_len=q_len, r_len=r_len,
                       band=adaptive_bandwidth(L, w), capacity=capacity)
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchGroup:
+    """One length class of a ragged request: its bucket geometry plus the
+    caller positions of the member pairs (for scatter-back)."""
+    spec: BucketSpec
+    indices: np.ndarray  # (k,) int64 positions in the caller's order
+
+
+def plan_buckets(q_lens, r_lens, *, base_bandwidth: int | None = None,
+                 capacity: int = 64,
+                 edges=DEFAULT_BUCKET_EDGES) -> list[DispatchGroup]:
+    """Multi-bucket scheduler: partition reads into per-length-class
+    dispatch groups, each with its own padded geometry and band width
+    B = min(w + 0.01 L, 100)."""
+    q_lens = np.asarray(q_lens, np.int64)
+    r_lens = np.asarray(r_lens, np.int64)
+    cls = np.array([_round_up(int(max(q, r)), edges)
+                    for q, r in zip(q_lens, r_lens)], np.int64)
+    groups = []
+    for c in sorted(set(cls.tolist())):
+        idx = np.flatnonzero(cls == c)
+        q_len = _round_up(int(q_lens[idx].max()), edges)
+        r_len = _round_up(int(r_lens[idx].max()), edges)
+        w = default_base_bandwidth(int(c), base_bandwidth)
+        spec = BucketSpec(q_len=q_len, r_len=r_len,
+                          band=adaptive_bandwidth(int(c), w),
+                          capacity=capacity)
+        groups.append(DispatchGroup(spec=spec, indices=idx))
+    return groups
+
+
+def pad_group(reads, refs, spec: BucketSpec,
+              pad_multiple: int | None = None):
+    """Pad a list of encoded pairs to a dispatch-ready (q, r, n, m) tuple.
+
+    N is padded up to a multiple of `pad_multiple` (default: the bucket
+    capacity) with dummy length-1 pairs.
+    """
+    n = np.asarray([len(x) for x in reads], np.int32)
+    m = np.asarray([len(x) for x in refs], np.int32)
+    N = len(reads)
+    mult = pad_multiple if pad_multiple is not None else spec.capacity
+    N_pad = int(np.ceil(max(N, 1) / mult) * mult)
+    q_pad = np.full((N_pad, spec.q_len), 4, np.int8)
+    r_pad = np.full((N_pad, spec.r_len), 4, np.int8)
+    for i, (read, ref) in enumerate(zip(reads, refs)):
+        q_pad[i, :len(read)] = read
+        r_pad[i, :len(ref)] = ref
+    n = np.concatenate([n, np.ones(N_pad - N, np.int32)])
+    m = np.concatenate([m, np.ones(N_pad - N, np.int32)])
+    return q_pad, r_pad, n, m
 
 
 @dataclasses.dataclass
 class AlignmentBatch:
     """A padded, dispatch-ready batch of (query, reference) pairs."""
-    q_pad: np.ndarray   # (N, q_len) int8
-    r_pad: np.ndarray   # (N, r_len) int8
-    n: np.ndarray       # (N,) int32 true query lengths
-    m: np.ndarray       # (N,) int32 true reference lengths
+    q_pad: np.ndarray   # (N_pad, q_len) int8
+    r_pad: np.ndarray   # (N_pad, r_len) int8
+    n: np.ndarray       # (N_pad,) int32 true query lengths (1 for dummies)
+    m: np.ndarray       # (N_pad,) int32 true reference lengths
     spec: BucketSpec
+    num_real: int       # true request size N, before dummy-pair padding
 
     @classmethod
     def from_lists(cls, reads, refs, *, base_bandwidth=None, capacity=64):
@@ -63,40 +136,65 @@ class AlignmentBatch:
         m = np.asarray([len(x) for x in refs], np.int32)
         spec = make_bucket(n, m, base_bandwidth=base_bandwidth,
                            capacity=capacity)
-        N = len(reads)
-        # Pad N up to a multiple of capacity so every dispatch is full.
-        N_pad = int(np.ceil(N / spec.capacity) * spec.capacity)
-        q_pad = np.full((N_pad, spec.q_len), 4, np.int8)
-        r_pad = np.full((N_pad, spec.r_len), 4, np.int8)
-        for i, (read, ref) in enumerate(zip(reads, refs)):
-            q_pad[i, :len(read)] = read
-            r_pad[i, :len(ref)] = ref
-        n = np.concatenate([n, np.ones(N_pad - N, np.int32)])
-        m = np.concatenate([m, np.ones(N_pad - N, np.int32)])
-        return cls(q_pad=q_pad, r_pad=r_pad, n=n, m=m, spec=spec)
+        q_pad, r_pad, n, m = pad_group(reads, refs, spec)
+        return cls(q_pad=q_pad, r_pad=r_pad, n=n, m=m, spec=spec,
+                   num_real=len(reads))
 
-    @property
-    def num_real(self) -> int:
-        return len(self.n)
+
+def run_dispatch(bk, q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
+                 capacity: int, num_real: int, adaptive: bool = True,
+                 collect_tb: bool = False, mode: str = "global"):
+    """Run one padded single-length-class group through a backend.
+
+    The shared dispatch core of `align_batch` and the engine's
+    multi-bucket path: execute in fixed-capacity slices (one XLA program
+    per (bucket shape, band)), merge to numpy, strip dummy padding down
+    to `num_real`, and — when collect_tb — decode every CIGAR at once
+    with the vectorised `traceback_banded_batch` (semiglobal paths start
+    from the tracked best cell).
+    """
+    outs = []
+    for lo in range(0, q_pad.shape[0], capacity):
+        sl = slice(lo, lo + capacity)
+        outs.append(bk.run(
+            jnp.asarray(q_pad[sl]), jnp.asarray(r_pad[sl]),
+            jnp.asarray(n[sl]), jnp.asarray(m[sl]),
+            sc=sc, band=band, adaptive=adaptive,
+            collect_tb=collect_tb, mode=mode))
+    merged = {}
+    for key in outs[0]:
+        merged[key] = np.concatenate(
+            [np.asarray(o[key]) for o in outs])[:num_real]
+    if collect_tb:
+        if mode == "semiglobal":
+            starts = np.stack([merged["best_i"], merged["best_j"]], axis=1)
+        else:
+            starts = None
+        merged["cigars"] = banded.traceback_banded_batch(
+            merged["tb"], merged["los"], n[:num_real], m[:num_real],
+            band, starts=starts)
+    return merged
 
 
 def align_batch(batch: AlignmentBatch, sc: ScoringConfig = MINIMAP2, *,
                 adaptive: bool = True, collect_tb: bool = False,
-                mode: str = "global"):
-    """Run the adaptive banded aligner over every dispatch group.
+                mode: str = "global", backend: str = "reference",
+                backend_opts: dict | None = None):
+    """Run the banded aligner over every dispatch group of a batch.
 
     mode="semiglobal" gives free gaps at the reference-window ends — the
-    read-mapping configuration (candidate windows may be padded)."""
-    outs = []
-    cap = batch.spec.capacity
-    for lo in range(0, batch.q_pad.shape[0], cap):
-        sl = slice(lo, lo + cap)
-        outs.append(banded.banded_align_batch(
-            jnp.asarray(batch.q_pad[sl]), jnp.asarray(batch.r_pad[sl]),
-            jnp.asarray(batch.n[sl]), jnp.asarray(batch.m[sl]),
-            sc=sc, band=batch.spec.band, adaptive=adaptive,
-            collect_tb=collect_tb, mode=mode))
-    merged = {}
-    for key in outs[0]:
-        merged[key] = np.concatenate([np.asarray(o[key]) for o in outs])
-    return merged
+    read-mapping configuration (candidate windows may be padded).
+
+    backend selects the execution path ('reference', 'pallas', 'auto');
+    results are bit-identical across backends. Dummy padding pairs are
+    stripped: every returned array covers exactly `batch.num_real` reads.
+    When collect_tb, the result also carries 'cigars' — decoded for the
+    whole batch by the vectorised `traceback_banded_batch` (no per-pair
+    Python loop on this path).
+    """
+    bk = get_backend(backend, **(backend_opts or {}))
+    return run_dispatch(bk, batch.q_pad, batch.r_pad, batch.n, batch.m,
+                        sc=sc, band=batch.spec.band,
+                        capacity=batch.spec.capacity,
+                        num_real=batch.num_real, adaptive=adaptive,
+                        collect_tb=collect_tb, mode=mode)

@@ -20,15 +20,29 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
-from repro.core import banded
+try:  # jax >= 0.6 exports shard_map at top level (kwarg: check_vma)
+    from jax import shard_map as _shard_map_impl
+    _REP_KWARG = "check_vma"
+except ImportError:  # older jax: experimental module (kwarg: check_rep)
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _REP_KWARG = "check_rep"
+
+from repro.core.backends import get_backend
 from repro.core.scoring import ScoringConfig, MINIMAP2
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compat shard_map with replication checking disabled."""
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **{_REP_KWARG: False})
 
 
 def make_aligner(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *, band: int,
                  adaptive: bool = True, collect_tb: bool = False,
-                 batch_axes: tuple[str, ...] | None = None):
+                 batch_axes: tuple[str, ...] | None = None,
+                 backend: str = "reference",
+                 backend_opts: dict | None = None):
     """Builds a pjit-able batched aligner sharded over the mesh.
 
     Args:
@@ -36,19 +50,22 @@ def make_aligner(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *, band: int,
       batch_axes: mesh axes to shard the batch over. Defaults to all axes
         named "pod"/"data" present in the mesh (alignment never uses
         "model" — a tile needs no partner).
+      backend: engine execution backend run on each shard ('reference',
+        'pallas', 'auto'); the backend contract is jax-traceable, so the
+        same shard_map wrapper serves every path.
     """
     if batch_axes is None:
         batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
     spec = P(batch_axes)
+    bk = get_backend(backend, **(backend_opts or {}))
 
     def local_align(q, r, n, m):
-        return banded.banded_align_batch(q, r, n, m, sc=sc, band=band,
-                                         adaptive=adaptive,
-                                         collect_tb=collect_tb)
+        return bk.run(q, r, n, m, sc=sc, band=band, adaptive=adaptive,
+                      collect_tb=collect_tb)
 
     sharded = shard_map(local_align, mesh=mesh,
                         in_specs=(spec, spec, spec, spec),
-                        out_specs=spec, check_vma=False)
+                        out_specs=spec)
     return jax.jit(sharded)
 
 

@@ -13,22 +13,29 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.banded import banded_align, banded_align_batch, traceback_banded
+from repro.core.backends import get_backend
+from repro.core.banded import banded_align, traceback_banded
 from repro.core.scoring import EDIT_DISTANCE, adaptive_bandwidth
 
 
 def edit_distance_batch(q_pad, r_pad, n, m, *, band: int | None = None,
-                        with_traceback: bool = False):
+                        with_traceback: bool = False,
+                        backend: str = "reference",
+                        backend_opts: dict | None = None):
     """Banded edit distance for a padded batch.
 
-    Returns dict with 'distance' ((B,) int32) and optionally the traceback
-    planes. distance = -score under the EDIT_DISTANCE scoring.
+    Runs the degenerate scoring through the selected execution backend
+    ('reference', 'pallas', 'auto') — the paper's reconfigurable data
+    flow: same engine, different scoring constants. Returns dict with
+    'distance' ((B,) int32) and optionally the traceback planes.
+    distance = -score under the EDIT_DISTANCE scoring.
     """
     if band is None:
         band = adaptive_bandwidth(int(q_pad.shape[1]), base_bandwidth=10)
-    out = banded_align_batch(q_pad, r_pad, n, m, sc=EDIT_DISTANCE, band=band,
-                             adaptive=True, collect_tb=with_traceback)
-    result = {"distance": -out["score"], "band": band}
+    bk = get_backend(backend, **(backend_opts or {}))
+    out = bk.run(q_pad, r_pad, n, m, sc=EDIT_DISTANCE, band=band,
+                 adaptive=True, collect_tb=with_traceback)
+    result = {"distance": -np.asarray(out["score"]), "band": band}
     if with_traceback:
         result["tb"] = out["tb"]
         result["los"] = out["los"]

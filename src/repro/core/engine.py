@@ -1,0 +1,137 @@
+"""AlignmentEngine — the unified multi-backend alignment execution stack.
+
+This is the host dispatcher of the paper's deployment picture (Fig. 2a):
+requests arrive as ragged lists of (read, candidate window) pairs; the
+engine
+
+  1. plans per-length-class `DispatchGroup`s (`core.batch.plan_buckets`)
+     so every compute dispatch runs a fixed geometry with its own adaptive
+     band width B = min(w + 0.01 L, 100) — the paper's host-side length
+     grouping that keeps each fixed-geometry compute memory full (§IV-B,
+     Fig. 6),
+  2. pads each group and executes it on the selected backend
+     ('reference' = vmapped lax.scan, 'pallas' = the in-VMEM wavefront
+     kernel, 'auto' = pallas on TPU else reference; see `core.backends`),
+  3. scatters results back into the caller's original read order, and
+  4. when tracebacks are requested, decodes every group's (T, B) flag
+     planes at once with the vectorised `traceback_banded_batch`.
+
+All backends return bit-identical results (integer DP) — the engine is a
+pure scheduling layer. Layering and the backend contract are documented
+in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.backends import available_backends, get_backend, \
+    resolve_backend
+from repro.core.batch import (DEFAULT_BUCKET_EDGES, default_base_bandwidth,
+                              pad_group, plan_buckets, run_dispatch)
+from repro.core.scoring import ScoringConfig, MINIMAP2, adaptive_bandwidth
+
+#: Result keys every backend returns for each pair (original read order).
+SCALAR_KEYS = ("score", "final_lo", "best_score", "best_i", "best_j")
+
+
+@dataclasses.dataclass
+class AlignmentEngine:
+    """One result contract over interchangeable execution backends.
+
+    Attributes:
+      backend: 'reference' | 'pallas' | 'auto' (resolved at construction),
+        or an already-constructed backend object.
+      sc: affine-gap scoring config shared by every dispatch.
+      adaptive: adaptive wavefront direction (Table V ablation switch).
+      base_bandwidth: w in B = min(w + 0.01 L, 100); None = per-class
+        default (10 short / 30 long, §VI-B).
+      capacity: pairs per dispatch group slice (sequence-level k).
+      backend_opts: forwarded to the backend constructor (e.g. batch_tile,
+        chunk, interpret for pallas).
+    """
+
+    backend: object = "auto"
+    sc: ScoringConfig = MINIMAP2
+    adaptive: bool = True
+    base_bandwidth: int | None = None
+    capacity: int = 64
+    backend_opts: dict | None = None
+    bucket_edges: tuple = DEFAULT_BUCKET_EDGES
+
+    def __post_init__(self):
+        self.backend = get_backend(self.backend,
+                                   **(self.backend_opts or {}))
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    # ------------------------------------------------------------------
+    # Padded single-length-class path (jax arrays in, jax arrays out).
+    # ------------------------------------------------------------------
+    def align_arrays(self, q_pad, r_pad, n, m, *, band: int | None = None,
+                    mode: str = "global", collect_tb: bool = False):
+        """Align an already-padded single-class batch on the backend.
+
+        The thin path used by `edit_distance_batch`, `core.distributed`
+        and the benchmarks; returns the raw backend result dict.
+        """
+        if band is None:
+            L = max(int(q_pad.shape[1]), int(r_pad.shape[1]))
+            band = adaptive_bandwidth(L, default_base_bandwidth(
+                L, self.base_bandwidth))
+        return self.backend.run(q_pad, r_pad, n, m, sc=self.sc, band=band,
+                                adaptive=self.adaptive,
+                                collect_tb=collect_tb, mode=mode)
+
+    # ------------------------------------------------------------------
+    # Ragged multi-bucket path (lists in, original-order numpy out).
+    # ------------------------------------------------------------------
+    def align(self, reads, refs, *, mode: str = "global",
+              collect_tb: bool = False):
+        """Align ragged (read, reference) lists through the multi-bucket
+        scheduler.
+
+        Returns a dict of (N,) arrays in the caller's original order:
+        the SCALAR_KEYS plus 'band' (the per-read band width actually
+        used); with collect_tb also 'cigars' (list of N CIGARs, decoded
+        per group by the vectorised batched traceback; semiglobal CIGARs
+        start from the tracked best cell on the last read row).
+        """
+        if len(reads) != len(refs):
+            raise ValueError("reads and refs must pair up")
+        N = len(reads)
+        out = {k: np.zeros(N, np.int32) for k in SCALAR_KEYS}
+        out["band"] = np.zeros(N, np.int32)
+        cigars: list = [None] * N
+
+        groups = plan_buckets([len(x) for x in reads],
+                              [len(x) for x in refs],
+                              base_bandwidth=self.base_bandwidth,
+                              capacity=self.capacity,
+                              edges=self.bucket_edges)
+        for g in groups:
+            idx = g.indices
+            q_pad, r_pad, n, m = pad_group([reads[i] for i in idx],
+                                           [refs[i] for i in idx], g.spec)
+            merged = run_dispatch(
+                self.backend, q_pad, r_pad, n, m, sc=self.sc,
+                band=g.spec.band, capacity=g.spec.capacity,
+                num_real=len(idx), adaptive=self.adaptive,
+                collect_tb=collect_tb, mode=mode)
+            for key in SCALAR_KEYS:
+                out[key][idx] = merged[key]
+            out["band"][idx] = g.spec.band
+            if collect_tb:
+                for pos, cig in zip(idx, merged["cigars"]):
+                    cigars[pos] = cig
+        if collect_tb:
+            out["cigars"] = cigars
+        return out
+
+
+__all__ = ["AlignmentEngine", "SCALAR_KEYS", "available_backends",
+           "get_backend", "resolve_backend"]

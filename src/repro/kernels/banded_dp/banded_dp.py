@@ -51,11 +51,17 @@ def _shift_away_lane0(a, fill):
     return jnp.concatenate([jnp.full_like(a[:, :1], fill), a[:, :-1]], axis=1)
 
 
+# Column layout of the (bt, STATS_W) stats plane (the per-pair scalar
+# results carried across step chunks and streamed out once at the end).
+STATS_W = 8
+_SCORE, _FINAL_LO, _BEST, _BEST_I, _BEST_J = 0, 1, 2, 3, 4
+
+
 def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
-                      adaptive: bool, bt: int,
+                      adaptive: bool, bt: int, mode: str, collect_tb: bool,
                       # refs
                       q_ref, r_ref, n_ref, m_ref,          # inputs
-                      tb_ref, lo_out_ref, score_ref,        # outputs
+                      tb_ref, lo_out_ref, stats_ref,        # outputs
                       u_s, v_s, x_s, y_s, H_s, lo_s):       # scratch
     o, e = sc.gap_open, sc.gap_extend
     oe = jnp.int32(o + e)
@@ -72,7 +78,10 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
         y_s[...] = z
         H_s[...] = jnp.full((bt, B), NEG, jnp.int32).at[:, 0].set(0)
         lo_s[...] = jnp.zeros((bt, 1), jnp.int32)
-        score_ref[...] = jnp.full((bt, 1), NEG, jnp.int32)
+        best0 = NEG if mode == "semiglobal" else 0
+        stats0 = (jnp.zeros((bt, STATS_W), jnp.int32)
+                  .at[:, _SCORE].set(NEG).at[:, _BEST].set(best0))
+        stats_ref[...] = stats0
 
     n = n_ref[...].astype(jnp.int32)  # (bt, 1)
     m = m_ref[...].astype(jnp.int32)
@@ -83,7 +92,7 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
     lanes = jax.lax.broadcasted_iota(jnp.int32, (bt, B), 1)
 
     def step(s, carry):
-        u, v, x, y, H, lo, score = carry
+        u, v, x, y, H, lo, stats = carry
         t = tblk * chunk + s + 1  # global wavefront step (diag index)
 
         # ---- direction (paper §IV-B2 + feasibility clamps) ----
@@ -145,24 +154,34 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
                           jnp.where(left_valid, left_H + v_new - oe, NEG))
 
         # ---- traceback flags ----
-        direction = jnp.where(a_new == s_arm, 0,
-                              jnp.where(a_new == x_arm, 1, 2))
-        ext_e = ((x_arm + o) > a_new).astype(jnp.int32)
-        ext_f = ((y_arm + o) > a_new).astype(jnp.int32)
-        code = (direction + 4 * ext_e + 8 * ext_f).astype(jnp.uint8)
-        code = jnp.where(interior, code, jnp.uint8(0))
+        if collect_tb:
+            direction = jnp.where(a_new == s_arm, 0,
+                                  jnp.where(a_new == x_arm, 1, 2))
+            ext_e = ((x_arm + o) > a_new).astype(jnp.int32)
+            ext_f = ((y_arm + o) > a_new).astype(jnp.int32)
+            code = (direction + 4 * ext_e + 8 * ext_f).astype(jnp.uint8)
+            code = jnp.where(interior, code, jnp.uint8(0))
+        else:
+            code = None
 
         # ---- boundary overrides ----
         ob = jnp.int32(o)
-        v_new = jnp.where(brow, jnp.where(j_vec == 1, 0, ob), v_new)
-        x_new = jnp.where(brow, jnp.where(j_vec == 1, 0, ob), x_new)
+        if mode == "semiglobal":
+            # Free leading reference gap: H(0,j) = 0 for all j.
+            v_new = jnp.where(brow, oe, v_new)
+            x_new = jnp.where(brow, oe, x_new)
+        else:
+            v_new = jnp.where(brow, jnp.where(j_vec == 1, 0, ob), v_new)
+            x_new = jnp.where(brow, jnp.where(j_vec == 1, 0, ob), x_new)
         u_new = jnp.where(brow, ob, u_new)
         y_new = jnp.where(brow, ob, y_new)
         u_new = jnp.where(bcol, jnp.where(i_vec == 1, 0, ob), u_new)
         y_new = jnp.where(bcol, jnp.where(i_vec == 1, 0, ob), y_new)
         v_new = jnp.where(bcol, ob, v_new)
         x_new = jnp.where(bcol, ob, x_new)
-        H_new = jnp.where(brow, -(o + j_vec * e), H_new)
+        H_new = jnp.where(brow,
+                          jnp.int32(0) if mode == "semiglobal"
+                          else -(o + j_vec * e), H_new)
         H_new = jnp.where(bcol, -(o + i_vec * e), H_new)
         H_new = jnp.where(valid, H_new, NEG)
         u_new = jnp.where(valid, u_new, 0)
@@ -170,12 +189,35 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
         x_new = jnp.where(valid, x_new, 0)
         y_new = jnp.where(valid, y_new, 0)
 
-        # ---- corner score capture + carry freeze ----
+        # ---- corner score capture ----
         done = t == (n + m)  # (bt,1)
         k_corner = jnp.clip(n - lo_new, 0, B - 1)  # (bt,1)
         h_corner = jnp.take_along_axis(H_new, k_corner, axis=1)
-        score_new = jnp.where(done, h_corner, score)
+        score_new = jnp.where(done, h_corner, stats[:, _SCORE:_SCORE + 1])
+        flo_new = jnp.where(done, lo_new, stats[:, _FINAL_LO:_FINAL_LO + 1])
 
+        # ---- extension/local best-cell tracking (paper §III-A2) ----
+        elig = interior & (t <= (n + m))
+        if mode == "semiglobal":
+            elig = elig & (i_vec == n)
+        H_masked = jnp.where(elig, H_new, NEG)
+        cand = jnp.max(H_masked, axis=1, keepdims=True)
+        # First (smallest-k) maximising lane — matches jnp.argmax ties.
+        k_best = jnp.min(jnp.where(H_masked == cand, lanes, B), axis=1,
+                         keepdims=True)
+        k_best = jnp.clip(k_best, 0, B - 1)
+        best_prev = stats[:, _BEST:_BEST + 1]
+        better = cand > best_prev
+        best_new = jnp.where(better, cand, best_prev)
+        bi_new = jnp.where(better, jnp.take_along_axis(i_vec, k_best, axis=1),
+                           stats[:, _BEST_I:_BEST_I + 1])
+        bj_new = jnp.where(better, jnp.take_along_axis(j_vec, k_best, axis=1),
+                           stats[:, _BEST_J:_BEST_J + 1])
+        stats_new = jnp.concatenate(
+            [score_new, flo_new, best_new, bi_new, bj_new,
+             stats[:, _BEST_J + 1:]], axis=1)
+
+        # ---- carry freeze past the final diagonal ----
         active = t <= (n + m)
         u = jnp.where(active, u_new, u)
         v = jnp.where(active, v_new, v)
@@ -185,24 +227,26 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
         lo = jnp.where(active, lo_new, lo)
 
         # ---- stream traceback + band offsets out (TBM write) ----
-        tb_ref[s] = code
-        lo_out_ref[s] = lo[:, 0]
-        return (u, v, x, y, H, lo, score_new)
+        if collect_tb:
+            tb_ref[s] = code
+            lo_out_ref[s] = lo[:, 0]
+        return (u, v, x, y, H, lo, stats_new)
 
     carry = (u_s[...], v_s[...], x_s[...], y_s[...], H_s[...], lo_s[...],
-             score_ref[...])
-    u, v, x, y, H, lo, score = jax.lax.fori_loop(0, chunk, step, carry)
+             stats_ref[...])
+    u, v, x, y, H, lo, stats = jax.lax.fori_loop(0, chunk, step, carry)
     u_s[...] = u
     v_s[...] = v
     x_s[...] = x
     y_s[...] = y
     H_s[...] = H
     lo_s[...] = lo
-    score_ref[...] = score
+    stats_ref[...] = stats
 
 
 def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
-                        adaptive: bool = True, batch_tile: int = 8,
+                        adaptive: bool = True, collect_tb: bool = True,
+                        mode: str = "global", batch_tile: int = 8,
                         chunk: int = 128, interpret: bool = True):
     """pl.pallas_call wrapper. See ops.banded_align_kernel_batch for the
     public jit'd API (padding, reshaping, traceback plumbing).
@@ -212,6 +256,9 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
       r_pad: (N, Lr).
       n, m: (N,) true lengths.
       band: band width B (lane dimension; <=128 keeps one VPU register row).
+      collect_tb: stream traceback flags; False is the score-only fast
+        path (no TBM traffic — the Fig. 14 "without traceback" mode).
+      mode: "global" or "semiglobal" (free reference-end gaps).
       chunk: wavefront steps per grid step (traceback block height).
       interpret: run the kernel body in interpret mode (CPU validation).
     """
@@ -226,25 +273,31 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
     n_chunks = T_pad // chunk
 
     kernel = functools.partial(_wavefront_kernel, sc, band, chunk,
-                               adaptive, bt)
+                               adaptive, bt, mode, collect_tb)
     grid = (nb, n_chunks)
 
-    out_shapes = (
-        jax.ShapeDtypeStruct((nb, T_pad, bt, band), jnp.uint8),  # tb
-        jax.ShapeDtypeStruct((nb, T_pad, bt), jnp.int32),        # lo per diag
-        jax.ShapeDtypeStruct((nb, bt, 1), jnp.int32),            # score
-    )
+    stats_shape = jax.ShapeDtypeStruct((nb, bt, STATS_W), jnp.int32)
+    stats_spec = pl.BlockSpec((1, bt, STATS_W), lambda b, t: (b, 0, 0))
+    if collect_tb:
+        out_shapes = (
+            jax.ShapeDtypeStruct((nb, T_pad, bt, band), jnp.uint8),  # tb
+            jax.ShapeDtypeStruct((nb, T_pad, bt), jnp.int32),        # lo/diag
+            stats_shape,
+        )
+        out_specs = (
+            pl.BlockSpec((1, chunk, bt, band), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, chunk, bt), lambda b, t: (b, t, 0)),
+            stats_spec,
+        )
+    else:
+        out_shapes = (stats_shape,)
+        out_specs = (stats_spec,)
     in_specs = [
         pl.BlockSpec((1, bt, Lq), lambda b, t: (b, 0, 0)),
         pl.BlockSpec((1, bt, Lr), lambda b, t: (b, 0, 0)),
         pl.BlockSpec((1, bt, 1), lambda b, t: (b, 0, 0)),
         pl.BlockSpec((1, bt, 1), lambda b, t: (b, 0, 0)),
     ]
-    out_specs = (
-        pl.BlockSpec((1, chunk, bt, band), lambda b, t: (b, t, 0, 0)),
-        pl.BlockSpec((1, chunk, bt), lambda b, t: (b, t, 0)),
-        pl.BlockSpec((1, bt, 1), lambda b, t: (b, 0, 0)),
-    )
     scratch_shapes = [
         pltpu.VMEM((bt, band), jnp.int32),  # u
         pltpu.VMEM((bt, band), jnp.int32),  # v
@@ -254,13 +307,21 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
         pltpu.VMEM((bt, 1), jnp.int32),     # lo
     ]
 
-    def unsqueeze_kernel(q_r, r_r, n_r, m_r, tb_r, lo_r, sc_r, *scratch):
+    def unsqueeze_kernel(q_r, r_r, n_r, m_r, *rest):
         # Blocks carry a leading size-1 grid dim; present 2-D views to the
-        # kernel body.
-        kernel(q_r.at[0], r_r.at[0], n_r.at[0], m_r.at[0],
-               tb_r.at[0], lo_r.at[0], sc_r.at[0], *scratch)
+        # kernel body. Without collect_tb there are no tb/lo outputs.
+        if collect_tb:
+            tb_r, lo_r, st_r = rest[:3]
+            scratch = rest[3:]
+            kernel(q_r.at[0], r_r.at[0], n_r.at[0], m_r.at[0],
+                   tb_r.at[0], lo_r.at[0], st_r.at[0], *scratch)
+        else:
+            st_r = rest[0]
+            scratch = rest[1:]
+            kernel(q_r.at[0], r_r.at[0], n_r.at[0], m_r.at[0],
+                   None, None, st_r.at[0], *scratch)
 
-    tb, los, score = pl.pallas_call(
+    outs = pl.pallas_call(
         unsqueeze_kernel,
         grid=grid,
         in_specs=in_specs,
@@ -273,9 +334,16 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
       n.reshape(nb, bt, 1).astype(jnp.int32),
       m.reshape(nb, bt, 1).astype(jnp.int32))
 
-    # Reassemble to (N, ...) batch-major layouts matching core.banded.
-    tb = tb.transpose(0, 2, 1, 3).reshape(N, T_pad, band)[:, :T]
-    los = los.transpose(0, 2, 1).reshape(N, T_pad)[:, :T]
-    los = jnp.concatenate([jnp.zeros((N, 1), jnp.int32), los], axis=1)
-    score = score.reshape(N)
-    return {"score": score, "tb": tb, "los": los}
+    stats = outs[-1].reshape(N, STATS_W)
+    out = {"score": stats[:, _SCORE], "final_lo": stats[:, _FINAL_LO],
+           "best_score": stats[:, _BEST], "best_i": stats[:, _BEST_I],
+           "best_j": stats[:, _BEST_J]}
+    if collect_tb:
+        tb, los = outs[0], outs[1]
+        # Reassemble to (N, ...) batch-major layouts matching core.banded.
+        tb = tb.transpose(0, 2, 1, 3).reshape(N, T_pad, band)[:, :T]
+        los = los.transpose(0, 2, 1).reshape(N, T_pad)[:, :T]
+        los = jnp.concatenate([jnp.zeros((N, 1), jnp.int32), los], axis=1)
+        out["tb"] = tb
+        out["los"] = los
+    return out

@@ -16,13 +16,16 @@ from repro.kernels.banded_dp.banded_dp import banded_align_pallas
 
 def banded_align_kernel_batch(q_pad, r_pad, n, m, *, sc: ScoringConfig,
                               band: int, adaptive: bool = True,
+                              collect_tb: bool = True, mode: str = "global",
                               batch_tile: int = 8, chunk: int = 128,
                               interpret: bool = True):
     """Kernel-path batched alignment.
 
     Pads the batch up to a multiple of batch_tile with dummy pairs, runs
-    the Pallas wavefront, and strips the padding. Returns
-    {'score': (N,), 'tb': (N, T, B) uint8, 'los': (N, T+1) int32}.
+    the Pallas wavefront, and strips the padding. Returns the same result
+    dict as `core.banded.banded_align_batch`: always 'score', 'final_lo',
+    'best_score', 'best_i', 'best_j' (each (N,) int32); with collect_tb
+    also 'tb' ((N, T, B) uint8) and 'los' ((N, T+1) int32).
     """
     q_pad = jnp.asarray(q_pad)
     r_pad = jnp.asarray(r_pad)
@@ -40,6 +43,7 @@ def banded_align_kernel_batch(q_pad, r_pad, n, m, *, sc: ScoringConfig,
         m = jnp.concatenate([m, jnp.ones((pad,), jnp.int32)])
 
     out = banded_align_pallas(q_pad, r_pad, n, m, sc=sc, band=band,
-                              adaptive=adaptive, batch_tile=batch_tile,
+                              adaptive=adaptive, collect_tb=collect_tb,
+                              mode=mode, batch_tile=batch_tile,
                               chunk=chunk, interpret=interpret)
     return {k: v[:N] for k, v in out.items()}

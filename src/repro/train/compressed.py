@@ -14,8 +14,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.core.distributed import shard_map
 
 from repro.optim import adamw_update
 from repro.optim.grad_compress import error_feedback_update, decompress_int8
@@ -82,7 +83,7 @@ def make_compressed_train_step(cfg, mesh, *, peak_lr=3e-4, warmup_steps=100,
                                                   "grad_norm": 0}))
         fn = shard_map(local_step, mesh=mesh,
                        in_specs=(state_specs, bspecs),
-                       out_specs=out_specs, check_vma=False)
+                       out_specs=out_specs)
         return fn(state, batch)
 
     return step

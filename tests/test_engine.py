@@ -1,0 +1,199 @@
+"""AlignmentEngine: backend equivalence, multi-bucket scheduling, and the
+vectorised batched traceback.
+
+The engine's contract is that the execution backend is a pure
+implementation detail: integer DP must be bit-identical between the
+vmapped lax.scan reference and the Pallas wavefront kernel across modes,
+traceback on/off, and ragged length mixes — and the multi-bucket
+scheduler must scatter every result back into the caller's read order.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (AlignmentBatch, AlignmentEngine, EDIT_DISTANCE,
+                        MINIMAP2, align_batch, edit_distance_batch,
+                        plan_buckets, resolve_backend, traceback_banded,
+                        traceback_banded_batch)
+from repro.core.banded import banded_align
+from repro.data.genome import ReadSimulator, random_genome, \
+    simulate_read_pairs
+
+# Small tiles keep the interpret-mode kernel affordable on CPU.
+PALLAS_OPTS = {"batch_tile": 4, "chunk": 64}
+
+SCALARS = ("score", "best_score", "best_i", "best_j")
+
+
+def _mixed_reads(n_pairs, lengths, profile="illumina", seed=0):
+    genome = random_genome(60_000, seed=seed)
+    sim = ReadSimulator(genome, profile, seed=seed + 1)
+    reads, refs = [], []
+    for k in range(n_pairs):
+        ref, read = sim.sample(lengths[k % len(lengths)])
+        refs.append(ref)
+        reads.append(read)
+    return reads, refs
+
+
+def _engines(capacity=4):
+    return (AlignmentEngine(backend="reference", capacity=capacity),
+            AlignmentEngine(backend="pallas", capacity=capacity,
+                            backend_opts=PALLAS_OPTS))
+
+
+@pytest.mark.parametrize("mode", ["global", "semiglobal"])
+@pytest.mark.parametrize("collect_tb", [False, True],
+                         ids=["score_only", "tb"])
+def test_backend_equivalence_ragged(mode, collect_tb):
+    """reference and pallas agree bit-exactly through engine.align over a
+    ragged mixed-length batch, in both modes, with and without tb."""
+    reads, refs = _mixed_reads(10, (40, 90, 150), seed=3)
+    eng_ref, eng_pal = _engines()
+    o1 = eng_ref.align(reads, refs, mode=mode, collect_tb=collect_tb)
+    o2 = eng_pal.align(reads, refs, mode=mode, collect_tb=collect_tb)
+    for k in SCALARS + ("band",):
+        np.testing.assert_array_equal(o1[k], o2[k], err_msg=k)
+    if collect_tb:
+        assert o1["cigars"] == o2["cigars"]
+    else:
+        assert "cigars" not in o1 and "cigars" not in o2
+
+
+@pytest.mark.parametrize("mode", ["global", "semiglobal"])
+def test_backend_equivalence_planes(mode):
+    """Raw traceback planes (tb, los) are identical through the padded
+    single-class engine path."""
+    q, r, n, m = simulate_read_pairs(6, 100, "ont_2d", seed=11)
+    eng_ref, eng_pal = _engines()
+    args = (jnp.asarray(q), jnp.asarray(r), jnp.asarray(n), jnp.asarray(m))
+    o1 = eng_ref.align_arrays(*args, band=32, mode=mode, collect_tb=True)
+    o2 = eng_pal.align_arrays(*args, band=32, mode=mode, collect_tb=True)
+    assert set(o1) == set(o2)
+    for k in o1:
+        np.testing.assert_array_equal(np.asarray(o1[k]), np.asarray(o2[k]),
+                                      err_msg=k)
+
+
+def test_align_batch_pallas_matches_reference_200_pairs():
+    """Acceptance: 200+-pair mixed-length batch, identical scores."""
+    reads, refs = _mixed_reads(208, (30, 60, 90, 120), seed=7)
+    batch = AlignmentBatch.from_lists(reads, refs, capacity=64)
+    out_ref = align_batch(batch, MINIMAP2, backend="reference")
+    out_pal = align_batch(batch, MINIMAP2, backend="pallas",
+                          backend_opts=PALLAS_OPTS)
+    assert out_ref["score"].shape == (208,)
+    for k in SCALARS:
+        np.testing.assert_array_equal(out_ref[k], out_pal[k], err_msg=k)
+
+
+def test_edit_distance_batch_pallas_matches_reference_200_pairs():
+    reads, refs = _mixed_reads(200, (30, 70, 110), seed=13)
+    L = 128
+    q = np.full((len(reads), L), 4, np.int8)
+    r = np.full((len(refs), L), 4, np.int8)
+    for i, (a, b) in enumerate(zip(reads, refs)):
+        q[i, :len(a)] = a
+        r[i, :len(b)] = b
+    n = np.asarray([len(a) for a in reads], np.int32)
+    m = np.asarray([len(b) for b in refs], np.int32)
+    d_ref = edit_distance_batch(q, r, n, m, backend="reference")
+    d_pal = edit_distance_batch(q, r, n, m, backend="pallas",
+                                backend_opts=PALLAS_OPTS)
+    assert d_ref["band"] == d_pal["band"]
+    np.testing.assert_array_equal(d_ref["distance"], d_pal["distance"])
+
+
+def test_multi_bucket_round_trip_original_order():
+    """A >= 3-length-class batch round-trips through the scheduler back
+    into the caller's read order: each scattered score equals an
+    independent single-pair run at the group's band."""
+    lengths = (60, 200, 400, 90, 300, 150, 700)
+    reads, refs = _mixed_reads(14, lengths, seed=5)
+    groups = plan_buckets([len(x) for x in reads], [len(x) for x in refs])
+    assert len(groups) >= 3  # the mix must actually span length classes
+    covered = np.sort(np.concatenate([g.indices for g in groups]))
+    np.testing.assert_array_equal(covered, np.arange(len(reads)))
+
+    eng = AlignmentEngine(backend="reference", capacity=4)
+    out = eng.align(reads, refs, collect_tb=False)
+    for i in range(len(reads)):
+        single = banded_align(jnp.asarray(reads[i]), jnp.asarray(refs[i]),
+                              len(reads[i]), len(refs[i]), sc=MINIMAP2,
+                              band=int(out["band"][i]))
+        assert int(single["score"]) == out["score"][i], i
+
+
+def test_batched_traceback_matches_per_pair():
+    """Acceptance: vectorised traceback == per-pair traceback_banded on
+    identical planes (global and from best-cell starts)."""
+    q, r, n, m = simulate_read_pairs(12, 90, "ont_2d", seed=17)
+    eng = AlignmentEngine(backend="reference")
+    out = eng.align_arrays(jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
+                           jnp.asarray(m), band=24, collect_tb=True)
+    tb, los = np.asarray(out["tb"]), np.asarray(out["los"])
+    batch_cigs = traceback_banded_batch(tb, los, n, m, 24)
+    for p in range(len(n)):
+        assert batch_cigs[p] == traceback_banded(tb[p], los[p], int(n[p]),
+                                                 int(m[p]), 24)
+    starts = np.stack([np.asarray(out["best_i"]),
+                       np.asarray(out["best_j"])], axis=1)
+    batch_best = traceback_banded_batch(tb, los, n, m, 24, starts=starts)
+    for p in range(len(n)):
+        assert batch_best[p] == traceback_banded(
+            tb[p], los[p], int(starts[p, 0]), int(starts[p, 1]), 24)
+
+
+def test_align_batch_strips_padding_and_skips_per_pair_loop(monkeypatch):
+    """num_real survives dummy-pair padding, and the per-pair Python
+    traceback loop is off the align_batch path entirely."""
+    import repro.core.banded as banded_mod
+
+    def _boom(*a, **k):
+        raise AssertionError("per-pair traceback_banded on the batch path")
+
+    monkeypatch.setattr(banded_mod, "traceback_banded", _boom)
+    reads, refs = _mixed_reads(10, (50, 80), seed=19)
+    batch = AlignmentBatch.from_lists(reads, refs, capacity=4)
+    assert batch.num_real == 10
+    assert batch.q_pad.shape[0] == 12  # padded to capacity multiple
+    out = align_batch(batch, MINIMAP2, collect_tb=True)
+    assert out["score"].shape == (10,)
+    assert len(out["cigars"]) == 10
+    assert all(c for c in out["cigars"])
+
+
+def test_semiglobal_cigars_start_from_best_cell():
+    """Engine semiglobal CIGARs decode from the tracked best cell: after
+    stripping the free leading reference gap (the 'D' run in row 0), the
+    path re-scores exactly to best_score."""
+    from repro.core import cigar_score
+    rng = np.random.default_rng(23)
+    reads, refs = [], []
+    offsets = []
+    for _ in range(6):
+        n, start = 60, int(rng.integers(8, 40))
+        window = rng.integers(0, 4, 160).astype(np.int8)
+        read = window[start:start + n].copy()
+        read[5::9] = (read[5::9] + 1) % 4  # mid-read substitutions only
+        reads.append(read)
+        refs.append(window)
+        offsets.append(start)
+    eng = AlignmentEngine(backend="reference", capacity=8)
+    out = eng.align(reads, refs, mode="semiglobal", collect_tb=True)
+    for i in range(len(reads)):
+        bi, bj = int(out["best_i"][i]), int(out["best_j"][i])
+        assert bi == len(reads[i])  # best cell sits on the last read row
+        cig = out["cigars"][i]
+        lead = 0
+        if cig and cig[0][0] == "D":
+            lead, cig = cig[0][1], cig[1:]
+        got = cigar_score(cig, reads[i][:bi], refs[i][lead:bj], MINIMAP2)
+        assert got == out["best_score"][i]
+
+
+def test_auto_backend_resolves():
+    assert resolve_backend("auto") in ("reference", "pallas")
+    eng = AlignmentEngine(backend="auto")
+    assert eng.backend_name in ("reference", "pallas")

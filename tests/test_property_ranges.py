@@ -7,6 +7,9 @@ distance). We fuzz sequences AND scoring parameters.
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EDIT_DISTANCE, MINIMAP2, ScoringConfig, diff_dp, \
