@@ -1,0 +1,125 @@
+"""Engine dispatch-pipeline throughput (fig12-style, mixed lengths).
+
+The host-side scheduling wins the paper attributes to RAPIDx's dispatcher
+(§IV-B, Fig. 6): the wavefront runs exactly n + m trips per pair, never
+the padded geometry. This benchmark builds a ragged mixed-length batch
+whose true lengths are at most *half* the bucket geometry — alternating
+(long read, short window) / (short read, long window) pairs, so the
+group's padded bucket is long x long while every true n + m stays near
+long + short — and measures `AlignmentEngine.align` wall time with
+wavefront trimming on vs off.
+
+Rows (per backend; the pallas rows emit only with a TPU attached — the
+same t_max trims the kernel's step-chunk grid, but the 1024-geometry
+sweep is infeasible in interpret mode on CPU):
+
+  engine/mixed_trimmed      trimmed sweep (t_max = max true n + m)
+  engine/mixed_untrimmed    full padded q_len + r_len sweep
+  engine/ragged_tb_pipeline multi-class ragged request with CIGAR decode
+                            through the async enqueue/finalize pipeline
+
+The trimmed row's `derived` records speedup_vs_untrimmed — the perf
+trajectory number captured in BENCH_engine.json (acceptance: >= 2x).
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit, time_host_fn, time_host_paired
+from repro.core import MINIMAP2, AlignmentEngine
+from repro.core.batch import plan_buckets
+
+#: Long/short true lengths. The long side sits just above the 512 bucket
+#: edge, so the group's padded geometry is 1024/1024 (T_full = 2048)
+#: while every true n + m <= 552 (t_max = 576) — the wavefront-trimming
+#: win the paper's exact-trip-count scheduling buys (§VI-F).
+LONG, SHORT = 520, 32
+
+
+def _mixed_halflength_pairs(n_pairs: int, seed: int = 61):
+    """Alternating (long, short) / (short, long) encoded pairs: the
+    bucket class is set by each pair's longest side, so the whole batch
+    shares one long x long group whose true sweeps are all ~half the
+    padded geometry."""
+    rng = np.random.default_rng(seed)
+    reads, refs = [], []
+    for k in range(n_pairs):
+        a, b = (LONG, SHORT) if k % 2 == 0 else (SHORT, LONG)
+        read = rng.integers(0, 4, a).astype(np.int8)
+        ref = rng.integers(0, 4, b).astype(np.int8)
+        # Make the short side a mutated slice of the long one so the DP
+        # has a real alignment to chase.
+        src, dst = (read, ref) if a >= b else (ref, read)
+        dst[:] = src[: len(dst)]
+        mut = rng.integers(0, len(dst), max(len(dst) // 20, 1))
+        dst[mut] = (dst[mut] + 1) % 4
+        reads.append(read)
+        refs.append(ref)
+    return reads, refs
+
+
+def _ragged_request(n_pairs: int, seed: int = 67):
+    rng = np.random.default_rng(seed)
+    lengths = (90, 250, 600)
+    reads, refs = [], []
+    for k in range(n_pairs):
+        L = lengths[k % len(lengths)]
+        read = rng.integers(0, 4, L).astype(np.int8)
+        ref = read.copy()
+        mut = rng.integers(0, L, max(L // 25, 1))
+        ref[mut] = (ref[mut] + 1) % 4
+        reads.append(read)
+        refs.append(ref)
+    return reads, refs
+
+
+def run(backends=("reference", "pallas"), smoke=False):
+    n_pairs = 8 if smoke else 64
+    iters = 1 if smoke else 5
+    reads, refs = _mixed_halflength_pairs(n_pairs)
+    g = plan_buckets([len(x) for x in reads], [len(x) for x in refs])[0]
+    T_full = g.spec.q_len + g.spec.r_len
+    for backend in backends:
+        if backend == "pallas":
+            # The 1024x1024 bucket is the whole point of this benchmark
+            # and is hours-long in interpret mode — kernel rows only make
+            # sense compiled (TPU attached).
+            from repro.core.backends.pallas import _default_interpret
+            if _default_interpret():
+                # A note, not an emit(): a 0.0-us row would pollute the
+                # machine-readable perf trajectory.
+                print("engine: pallas rows skipped (interpret mode, "
+                      "no TPU)", file=sys.stderr)
+                continue
+        # w=64 (the long-read accuracy regime of Table V) keeps per-step
+        # band compute dominant over fixed dispatch overhead, so the
+        # wall-time ratio tracks the step-count ratio.
+        eng_t = AlignmentEngine(backend=backend, sc=MINIMAP2,
+                                capacity=n_pairs, trim=True,
+                                base_bandwidth=64)
+        eng_u = AlignmentEngine(backend=backend, sc=MINIMAP2,
+                                capacity=n_pairs, trim=False,
+                                base_bandwidth=64)
+        us_t, us_u = time_host_paired(lambda: eng_t.align(reads, refs),
+                                      lambda: eng_u.align(reads, refs),
+                                      iters)
+        speedup = us_u / us_t
+        emit("engine/mixed_trimmed", us_t / n_pairs,
+             f"speedup_vs_untrimmed={speedup:.2f};t_max={g.spec.t_max};"
+             f"T_full={T_full};n_pairs={n_pairs}", backend=backend)
+        emit("engine/mixed_untrimmed", us_u / n_pairs,
+             f"T_full={T_full};n_pairs={n_pairs}", backend=backend)
+
+        # Multi-class ragged request through the async enqueue/finalize
+        # pipeline, CIGAR decode included (the serving-shaped number).
+        rreads, rrefs = _ragged_request(n_pairs)
+        us_p = time_host_fn(eng_t.align, rreads, rrefs, collect_tb=True,
+                            iters=iters)
+        n_groups = len(plan_buckets([len(x) for x in rreads],
+                                    [len(x) for x in rrefs]))
+        emit("engine/ragged_tb_pipeline", us_p / n_pairs,
+             f"reads_per_s={n_pairs / (us_p / 1e6):.4g};"
+             f"groups={n_groups};n_pairs={n_pairs}", backend=backend)

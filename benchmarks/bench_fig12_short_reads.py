@@ -43,7 +43,8 @@ def run(backends=("reference", "pallas"), smoke=False):
                 *args, band=B, collect_tb=True)["score"],
                 iters=1 if smoke else 2)
             emit(f"fig12/engine_{backend}/L{L}", us / k,
-                 f"reads_per_s={k / (us / 1e6):.3g};B={B}")
+                 f"reads_per_s={k / (us / 1e6):.3g};B={B}",
+                 backend=backend)
         proj = chip.reads_per_second(L, B)
         emit(f"fig12/rapidx_projected/L{L}", 1e6 / proj,
              f"reads_per_s={proj:.4g};paper_avg=1.39e7")

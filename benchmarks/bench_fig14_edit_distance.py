@@ -38,7 +38,8 @@ def run(backends=("reference", "pallas"), smoke=False):
                     backend_opts=opts)["distance"],
                     iters=1 if smoke else 2)
                 emit(f"fig14/{backend}/L{L}/{'tb' if tb else 'no_tb'}",
-                     us / NP, f"pairs_per_s={NP / (us / 1e6):.3g};B={B}")
+                     us / NP, f"pairs_per_s={NP / (us / 1e6):.3g};B={B}",
+                     backend=backend)
         proj = chip.reads_per_second(L, B, bits=RAPIDX_EDIT_BITS,
                                      traceback=True)
         emit(f"fig14/rapidx_projected/L{L}", 1e6 / proj,

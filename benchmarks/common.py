@@ -1,18 +1,29 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV/JSON emission."""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import numpy as np
 
-ROWS: list[tuple] = []
+ROWS: list[dict] = []
 
 
-def emit(name: str, us_per_call: float, derived: str):
-    ROWS.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str,
+         backend: str | None = None):
+    ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                 "derived": derived, "backend": backend})
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def write_json(path: str) -> None:
+    """Dump every emitted row as machine-readable JSON (the perf
+    trajectory format consumed by CI artifacts / BENCH_*.json)."""
+    with open(path, "w") as f:
+        json.dump(ROWS, f, indent=2)
+        f.write("\n")
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
@@ -25,6 +36,38 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
         jax.block_until_ready(fn(*args, **kw))
         times.append(time.perf_counter() - t0)
     return float(np.median(times) * 1e6)
+
+
+def time_host_fn(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Best-of-iters wall time per call in microseconds for host-side
+    pipelines (engine.align returns numpy — materialisation is the sync
+    point, so no block_until_ready). The minimum is the robust estimator
+    on loaded machines: external load only ever adds time."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    return float(np.min(times) * 1e6)
+
+
+def time_host_paired(fn_a, fn_b, iters: int = 3) -> tuple[float, float]:
+    """Best-of-iters wall times (us) for two host-side pipelines,
+    measured interleaved so ambient load hits both equally — the A/B
+    comparison survives noisy shared machines."""
+    fn_a()
+    fn_b()
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        tb.append(time.perf_counter() - t0)
+    return min(ta) * 1e6, min(tb) * 1e6
 
 
 def header():

@@ -9,14 +9,22 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig12    — short-read throughput                    (paper Fig. 12)
   fig13    — long-read throughput vs ASIC style       (paper Fig. 13)
   fig14    — edit distance w/ and w/o traceback       (paper Fig. 14)
+  engine   — engine dispatch-pipeline throughput      (trimming win)
   roofline — per-cell roofline terms from the dry-run (EXPERIMENTS §Roofline)
 
 Usage: PYTHONPATH=src python -m benchmarks.run
          [--only substr] [--smoke] [--backend {reference,pallas,both}]
+         [--json PATH]
 
 --smoke runs one tiny config per benchmark (CI sanity, CPU, ~1 min);
---backend narrows the alignment-throughput benchmarks (fig12/fig14) to a
-single AlignmentEngine execution backend (default: report both).
+--backend narrows the alignment-throughput benchmarks
+(fig12/fig14/engine) to a single AlignmentEngine execution backend
+(default: report both; the engine benchmark emits its pallas rows only
+when a TPU is attached — the 1024-geometry sweep is infeasible in
+interpret mode);
+--json additionally writes every row as machine-readable JSON
+(name, us_per_call, derived, backend) — the perf-trajectory format
+(e.g. BENCH_engine.json, uploaded as a CI artifact).
 """
 
 import argparse
@@ -24,11 +32,12 @@ import inspect
 import sys
 import traceback
 
-from benchmarks import (bench_fig9_fig10_dse, bench_fig11_pim_model,
-                        bench_fig12_short_reads, bench_fig13_long_reads,
-                        bench_fig14_edit_distance, bench_roofline,
-                        bench_table1_complexity, bench_table5_accuracy)
-from benchmarks.common import header
+from benchmarks import (bench_engine_throughput, bench_fig9_fig10_dse,
+                        bench_fig11_pim_model, bench_fig12_short_reads,
+                        bench_fig13_long_reads, bench_fig14_edit_distance,
+                        bench_roofline, bench_table1_complexity,
+                        bench_table5_accuracy)
+from benchmarks.common import header, write_json
 
 MODULES = [
     ("table1", bench_table1_complexity),
@@ -38,6 +47,7 @@ MODULES = [
     ("fig12", bench_fig12_short_reads),
     ("fig13", bench_fig13_long_reads),
     ("fig14", bench_fig14_edit_distance),
+    ("engine", bench_engine_throughput),
     ("roofline", bench_roofline),
 ]
 
@@ -60,7 +70,10 @@ def main() -> None:
                     help="one tiny config per benchmark (CI sanity)")
     ap.add_argument("--backend", default="both",
                     choices=["reference", "pallas", "both"],
-                    help="engine backend for fig12/fig14 rows")
+                    help="engine backend for the alignment-throughput "
+                         "rows (fig12/fig14/engine)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as machine-readable JSON")
     args = ap.parse_args()
     header()
     failed = []
@@ -72,6 +85,8 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if args.json:
+        write_json(args.json)
     if failed:
         print(f"FAILED benchmarks: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -5,10 +5,13 @@ Fig. 2a): the engine plans length-bucketed dispatch groups and a backend
 executes one padded, single-length-class group. Every backend honours one
 contract (see DESIGN.md §3):
 
-    run(q_pad, r_pad, n, m, *, sc, band, adaptive, collect_tb, mode)
+    run(q_pad, r_pad, n, m, *, sc, band, adaptive, collect_tb, mode,
+        t_max)
       -> dict with (N,) int32 'score', 'final_lo', 'best_score',
          'best_i', 'best_j'; plus 'tb' ((N, T, B) uint8) and 'los'
-         ((N, T+1) int32) when collect_tb.
+         ((N, T+1) int32) when collect_tb, where T is the static
+         trimmed sweep length t_max (>= max true n + m over the batch)
+         or the full padded Lq + Lr when t_max is None.
 
 `run` must be jax-traceable (it is called under jit / shard_map by
 `core.distributed`). Results are bit-identical across backends — integer
@@ -34,15 +37,26 @@ def available_backends() -> tuple[str, ...]:
     return tuple(_LAZY_BACKENDS)
 
 
+_AUTO_RESOLVED: str | None = None
+
+
 def resolve_backend(name: str) -> str:
     """Map 'auto' to a concrete backend: the Pallas kernel when a TPU is
     attached (compiled mode), the XLA reference path otherwise (the kernel
-    only runs in interpret mode on CPU, which is strictly slower)."""
+    only runs in interpret mode on CPU, which is strictly slower).
+
+    The platform probe (`jax.devices()`) runs once per process — the
+    attached device set never changes after jax initialises, and this is
+    called on every dispatch-group construction.
+    """
+    global _AUTO_RESOLVED
     if name != "auto":
         return name
-    import jax
-    platforms = {d.platform for d in jax.devices()}
-    return "pallas" if "tpu" in platforms else "reference"
+    if _AUTO_RESOLVED is None:
+        import jax
+        platforms = {d.platform for d in jax.devices()}
+        _AUTO_RESOLVED = "pallas" if "tpu" in platforms else "reference"
+    return _AUTO_RESOLVED
 
 
 def get_backend(name="auto", **opts):

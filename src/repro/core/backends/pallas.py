@@ -26,13 +26,13 @@ class PallasBackend:
     interpret: bool | None = None
 
     def run(self, q_pad, r_pad, n, m, *, sc, band, adaptive=True,
-            collect_tb=True, mode="global"):
+            collect_tb=True, mode="global", t_max=None):
         interpret = (self.interpret if self.interpret is not None
                      else _default_interpret())
         return banded_align_kernel_batch(
             q_pad, r_pad, n, m, sc=sc, band=band, adaptive=adaptive,
             collect_tb=collect_tb, mode=mode, batch_tile=self.batch_tile,
-            chunk=self.chunk, interpret=interpret)
+            chunk=self.chunk, interpret=interpret, t_max=t_max)
 
 
 BACKEND = PallasBackend

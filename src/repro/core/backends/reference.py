@@ -16,10 +16,11 @@ class ReferenceBackend:
     name = "reference"
 
     def run(self, q_pad, r_pad, n, m, *, sc, band, adaptive=True,
-            collect_tb=True, mode="global"):
+            collect_tb=True, mode="global", t_max=None):
         return banded.banded_align_batch(q_pad, r_pad, n, m, sc=sc,
                                          band=band, adaptive=adaptive,
-                                         collect_tb=collect_tb, mode=mode)
+                                         collect_tb=collect_tb, mode=mode,
+                                         t_max=t_max)
 
 
 BACKEND = ReferenceBackend

@@ -234,10 +234,10 @@ def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
 
 
 @functools.partial(jax.jit, static_argnames=("sc", "band", "adaptive",
-                                             "collect_tb", "mode"))
+                                             "collect_tb", "mode", "t_max"))
 def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
                  adaptive: bool = True, collect_tb: bool = True,
-                 mode: str = "global"):
+                 mode: str = "global", t_max: int | None = None):
     """Align one (query, reference) pair with the adaptive banded
     parallelized DP.
 
@@ -249,13 +249,21 @@ def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
       band: band width B (static).
       adaptive: adaptive wavefront direction on/off (Table V ablation).
       collect_tb: stream traceback flags (off = score-only, Fig. 14).
+      t_max: static trimmed sweep length — the wavefront runs exactly
+        t_max steps instead of the full padded n_pad + m_pad (§VI-F: the
+        required trip count is the *true* n + m). Must satisfy
+        t_max >= n + m for every pair in the (vmapped) batch; scores and
+        CIGARs are invariant to any valid choice because the carry
+        freezes past t = n + m. None = full padded sweep.
 
     Returns a dict with 'score' (int32), and when collect_tb: 'tb'
-    ((T, B) uint8 flags) and 'los' ((T+1,) int32 band offsets, los[0]=0).
+    ((T, B) uint8 flags) and 'los' ((T+1,) int32 band offsets, los[0]=0),
+    where T = t_max or n_pad + m_pad.
     """
     q_pad = q_pad.astype(jnp.int32)
     r_pad = r_pad.astype(jnp.int32)
-    T = q_pad.shape[0] + r_pad.shape[0]
+    T = int(t_max) if t_max is not None \
+        else q_pad.shape[0] + r_pad.shape[0]
     n = jnp.asarray(n, jnp.int32)
     m = jnp.asarray(m, jnp.int32)
 
@@ -274,11 +282,12 @@ def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
 
 
 def banded_align_batch(q_batch, r_batch, n_batch, m_batch, *, sc, band,
-                       adaptive=True, collect_tb=True, mode="global"):
+                       adaptive=True, collect_tb=True, mode="global",
+                       t_max: int | None = None):
     """Sequence-level parallelism: vmap over a padded batch."""
     fn = functools.partial(banded_align, sc=sc, band=band,
                            adaptive=adaptive, collect_tb=collect_tb,
-                           mode=mode)
+                           mode=mode, t_max=t_max)
     return jax.vmap(fn)(q_batch, r_batch, n_batch, m_batch)
 
 

@@ -16,6 +16,7 @@ read order (see `core.engine.AlignmentEngine`).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax.numpy as jnp
 import numpy as np
@@ -31,9 +32,27 @@ class BucketSpec:
     r_len: int       # padded reference length
     band: int        # band width used for the bucket
     capacity: int    # sequences per dispatch (sequence-level parallelism k)
+    t_max: int | None = None  # trimmed sweep length: max true n+m of the
+    #   members, rounded up to TRIM_QUANTUM (None = full q_len + r_len)
 
 
 DEFAULT_BUCKET_EDGES = (128, 256, 512, 1024, 2048, 4096, 8192, 16384)
+
+#: Trimmed sweep lengths are rounded up to this multiple so the number of
+#: compiled programs per bucket stays bounded (q_len + r_len over
+#: TRIM_QUANTUM classes at most) while giving up < TRIM_QUANTUM wasted
+#: wavefront steps.
+TRIM_QUANTUM = 64
+
+
+def _trimmed_sweep(q_lens, r_lens, q_len: int, r_len: int) -> int:
+    """The group's trimmed sweep length: the max true n + m over its
+    members (§VI-F — the wavefront needs exactly n + m trips), rounded up
+    to TRIM_QUANTUM and capped at the full padded geometry."""
+    t_true = int((np.asarray(q_lens, np.int64)
+                  + np.asarray(r_lens, np.int64)).max())
+    t_max = int(-(-t_true // TRIM_QUANTUM) * TRIM_QUANTUM)
+    return min(t_max, q_len + r_len)
 
 
 def _round_up(x: int, edges=DEFAULT_BUCKET_EDGES) -> int:
@@ -64,7 +83,8 @@ def make_bucket(q_lens, r_lens, *, base_bandwidth: int | None = None,
     L = max(q_len, r_len)
     w = default_base_bandwidth(L, base_bandwidth)
     return BucketSpec(q_len=q_len, r_len=r_len,
-                      band=adaptive_bandwidth(L, w), capacity=capacity)
+                      band=adaptive_bandwidth(L, w), capacity=capacity,
+                      t_max=_trimmed_sweep(q_lens, r_lens, q_len, r_len))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,9 +113,24 @@ def plan_buckets(q_lens, r_lens, *, base_bandwidth: int | None = None,
         w = default_base_bandwidth(int(c), base_bandwidth)
         spec = BucketSpec(q_len=q_len, r_len=r_len,
                           band=adaptive_bandwidth(int(c), w),
-                          capacity=capacity)
+                          capacity=capacity,
+                          t_max=_trimmed_sweep(q_lens[idx], r_lens[idx],
+                                               q_len, r_len))
         groups.append(DispatchGroup(spec=spec, indices=idx))
     return groups
+
+
+def _scatter_ragged(buf: np.ndarray, seqs, lens: np.ndarray) -> None:
+    """Bulk-copy N ragged sequences into the rows of a padded buffer.
+
+    One flat concatenation plus one boolean-mask scatter — no per-pair
+    Python copy loop (the mask selects row-major exactly the prefix cells
+    the concatenation order fills)."""
+    if len(seqs) == 0 or int(lens.max(initial=0)) == 0:
+        return
+    flat = np.concatenate([np.asarray(s, buf.dtype).ravel() for s in seqs])
+    mask = np.arange(buf.shape[1]) < lens[:, None]
+    buf[:len(seqs)][mask] = flat
 
 
 def pad_group(reads, refs, spec: BucketSpec,
@@ -112,9 +147,8 @@ def pad_group(reads, refs, spec: BucketSpec,
     N_pad = int(np.ceil(max(N, 1) / mult) * mult)
     q_pad = np.full((N_pad, spec.q_len), 4, np.int8)
     r_pad = np.full((N_pad, spec.r_len), 4, np.int8)
-    for i, (read, ref) in enumerate(zip(reads, refs)):
-        q_pad[i, :len(read)] = read
-        r_pad[i, :len(ref)] = ref
+    _scatter_ragged(q_pad, reads, n)
+    _scatter_ragged(r_pad, refs, m)
     n = np.concatenate([n, np.ones(N_pad - N, np.int32)])
     m = np.concatenate([m, np.ones(N_pad - N, np.int32)])
     return q_pad, r_pad, n, m
@@ -141,26 +175,34 @@ class AlignmentBatch:
                    num_real=len(reads))
 
 
-def run_dispatch(bk, q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
-                 capacity: int, num_real: int, adaptive: bool = True,
-                 collect_tb: bool = False, mode: str = "global"):
-    """Run one padded single-length-class group through a backend.
+def enqueue_dispatch(run, q_pad, r_pad, n, m, *, capacity: int):
+    """Enqueue one padded single-length-class group on the device.
 
-    The shared dispatch core of `align_batch` and the engine's
-    multi-bucket path: execute in fixed-capacity slices (one XLA program
-    per (bucket shape, band)), merge to numpy, strip dummy padding down
-    to `num_real`, and — when collect_tb — decode every CIGAR at once
-    with the vectorised `traceback_banded_batch` (semiglobal paths start
-    from the tracked best cell).
+    `run` is a fully-bound backend callable `(q, r, n, m) -> result
+    dict` — a partial over `backend.run` or a jit'd shard_map program
+    (the engine's mesh path, where each slice spans one capacity block
+    per mesh shard). Executes in fixed-capacity slices (one XLA program
+    per (bucket shape, band, t_max)) and returns the raw per-slice
+    result dicts as *device arrays* — nothing is materialised on the
+    host, so JAX's async dispatch keeps the device busy while the
+    caller enqueues further groups or decodes earlier ones
+    (`finalize_dispatch`).
     """
     outs = []
     for lo in range(0, q_pad.shape[0], capacity):
         sl = slice(lo, lo + capacity)
-        outs.append(bk.run(
-            jnp.asarray(q_pad[sl]), jnp.asarray(r_pad[sl]),
-            jnp.asarray(n[sl]), jnp.asarray(m[sl]),
-            sc=sc, band=band, adaptive=adaptive,
-            collect_tb=collect_tb, mode=mode))
+        outs.append(run(jnp.asarray(q_pad[sl]), jnp.asarray(r_pad[sl]),
+                        jnp.asarray(n[sl]), jnp.asarray(m[sl])))
+    return outs
+
+
+def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
+                      collect_tb: bool = False, mode: str = "global"):
+    """Materialise an enqueued group: merge slices to numpy (this blocks
+    only on *this* group's device work), strip dummy padding down to
+    `num_real`, and — when collect_tb — decode every CIGAR at once with
+    the vectorised `traceback_banded_batch` (semiglobal paths start from
+    the tracked best cell)."""
     merged = {}
     for key in outs[0]:
         merged[key] = np.concatenate(
@@ -174,6 +216,21 @@ def run_dispatch(bk, q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
             merged["tb"], merged["los"], n[:num_real], m[:num_real],
             band, starts=starts)
     return merged
+
+
+def run_dispatch(bk, q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
+                 capacity: int, num_real: int, adaptive: bool = True,
+                 collect_tb: bool = False, mode: str = "global",
+                 t_max: int | None = None):
+    """Run one padded single-length-class group through a backend:
+    `enqueue_dispatch` + `finalize_dispatch` back to back (the shared
+    dispatch core of `align_batch`; the engine's multi-bucket path calls
+    the two phases separately to overlap groups)."""
+    run = functools.partial(bk.run, sc=sc, band=band, adaptive=adaptive,
+                            collect_tb=collect_tb, mode=mode, t_max=t_max)
+    outs = enqueue_dispatch(run, q_pad, r_pad, n, m, capacity=capacity)
+    return finalize_dispatch(outs, n, m, band=band, num_real=num_real,
+                             collect_tb=collect_tb, mode=mode)
 
 
 def align_batch(batch: AlignmentBatch, sc: ScoringConfig = MINIMAP2, *,
@@ -197,4 +254,5 @@ def align_batch(batch: AlignmentBatch, sc: ScoringConfig = MINIMAP2, *,
                         sc=sc, band=batch.spec.band,
                         capacity=batch.spec.capacity,
                         num_real=batch.num_real, adaptive=adaptive,
-                        collect_tb=collect_tb, mode=mode)
+                        collect_tb=collect_tb, mode=mode,
+                        t_max=batch.spec.t_max)

@@ -15,11 +15,9 @@ independence.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 try:  # jax >= 0.6 exports shard_map at top level (kwarg: check_vma)
     from jax import shard_map as _shard_map_impl
@@ -28,7 +26,6 @@ except ImportError:  # older jax: experimental module (kwarg: check_rep)
     from jax.experimental.shard_map import shard_map as _shard_map_impl
     _REP_KWARG = "check_rep"
 
-from repro.core.backends import get_backend
 from repro.core.scoring import ScoringConfig, MINIMAP2
 
 
@@ -42,8 +39,15 @@ def make_aligner(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *, band: int,
                  adaptive: bool = True, collect_tb: bool = False,
                  batch_axes: tuple[str, ...] | None = None,
                  backend: str = "reference",
-                 backend_opts: dict | None = None):
+                 backend_opts: dict | None = None,
+                 t_max: int | None = None):
     """Builds a pjit-able batched aligner sharded over the mesh.
+
+    A thin wrapper over `AlignmentEngine(mesh=...)`: the returned
+    callable is the engine's cached jit'd shard_map program for this
+    dispatch signature (`AlignmentEngine.sharded_runner`). The engine's
+    ragged `align` path shards its dispatch groups through the very same
+    machinery.
 
     Args:
       mesh: device mesh; the batch shards over `batch_axes`.
@@ -53,20 +57,16 @@ def make_aligner(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *, band: int,
       backend: engine execution backend run on each shard ('reference',
         'pallas', 'auto'); the backend contract is jax-traceable, so the
         same shard_map wrapper serves every path.
+      t_max: optional trimmed sweep length (>= max true n + m of every
+        batch the aligner will see).
     """
-    if batch_axes is None:
-        batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-    spec = P(batch_axes)
-    bk = get_backend(backend, **(backend_opts or {}))
+    from repro.core.engine import AlignmentEngine
 
-    def local_align(q, r, n, m):
-        return bk.run(q, r, n, m, sc=sc, band=band, adaptive=adaptive,
-                      collect_tb=collect_tb)
-
-    sharded = shard_map(local_align, mesh=mesh,
-                        in_specs=(spec, spec, spec, spec),
-                        out_specs=spec)
-    return jax.jit(sharded)
+    eng = AlignmentEngine(backend=backend, sc=sc, adaptive=adaptive,
+                          backend_opts=backend_opts, mesh=mesh,
+                          batch_axes=batch_axes)
+    return eng.sharded_runner(band=band, collect_tb=collect_tb,
+                              t_max=t_max)
 
 
 def alignment_serve_step(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *,

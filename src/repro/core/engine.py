@@ -8,12 +8,22 @@ engine
      so every compute dispatch runs a fixed geometry with its own adaptive
      band width B = min(w + 0.01 L, 100) — the paper's host-side length
      grouping that keeps each fixed-geometry compute memory full (§IV-B,
-     Fig. 6),
-  2. pads each group and executes it on the selected backend
-     ('reference' = vmapped lax.scan, 'pallas' = the in-VMEM wavefront
-     kernel, 'auto' = pallas on TPU else reference; see `core.backends`),
-  3. scatters results back into the caller's original read order, and
-  4. when tracebacks are requested, decodes every group's (T, B) flag
+     Fig. 6). Each group also records its trimmed sweep length
+     `t_max` (max true n + m, §VI-F) so no backend sweeps the dead
+     diagonals of the padded geometry,
+  2. dispatches groups through a depth-1 lookahead pipeline on the
+     selected backend ('reference' = vmapped lax.scan, 'pallas' = the
+     in-VMEM wavefront kernel, 'auto' = pallas on TPU else reference;
+     see `core.backends`): group k+1's capacity slices are enqueued
+     on-device before group k is materialised, so JAX async dispatch
+     keeps the device computing group k+1 while the host fetches and
+     CIGAR-decodes group k — with at most two groups' buffers live,
+  3. with `mesh=`, shards each dispatch slice over the mesh's data axes
+     via `shard_map` (paper Fig. 6(a) tile level: alignment needs no
+     inter-tile communication, so the lowered program has zero
+     collectives) — one capacity block per shard per slice,
+  4. scatters results back into the caller's original read order, and
+  5. when tracebacks are requested, decodes every group's (T, B) flag
      planes at once with the vectorised `traceback_banded_batch`.
 
 All backends return bit-identical results (integer DP) — the engine is a
@@ -24,17 +34,40 @@ in DESIGN.md.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
 from repro.core.backends import available_backends, get_backend, \
     resolve_backend
 from repro.core.batch import (DEFAULT_BUCKET_EDGES, default_base_bandwidth,
+                              enqueue_dispatch, finalize_dispatch,
                               pad_group, plan_buckets, run_dispatch)
 from repro.core.scoring import ScoringConfig, MINIMAP2, adaptive_bandwidth
 
 #: Result keys every backend returns for each pair (original read order).
 SCALAR_KEYS = ("score", "final_lo", "best_score", "best_i", "best_j")
+
+
+def _check_t_max(t_max, n, m) -> None:
+    """Reject a trimmed sweep shorter than some pair's true n + m — the
+    carry would freeze before that pair's corner and silently return a
+    truncated alignment. Only checkable where lengths are concrete; under
+    jit/shard_map tracing the caller's guarantee stands."""
+    if t_max is None:
+        return
+    import jax
+
+    if isinstance(n, jax.core.Tracer) or isinstance(m, jax.core.Tracer):
+        return
+    lens = np.asarray(n).astype(np.int64) + np.asarray(m).astype(np.int64)
+    if lens.size == 0:
+        return
+    t_true = int(lens.max())
+    if t_max < t_true:
+        raise ValueError(
+            f"t_max={t_max} < max true n + m = {t_true}: the trimmed "
+            "sweep would stop before every pair reaches its corner")
 
 
 @dataclasses.dataclass
@@ -48,9 +81,20 @@ class AlignmentEngine:
       adaptive: adaptive wavefront direction (Table V ablation switch).
       base_bandwidth: w in B = min(w + 0.01 L, 100); None = per-class
         default (10 short / 30 long, §VI-B).
-      capacity: pairs per dispatch group slice (sequence-level k).
+      capacity: pairs per dispatch group slice (sequence-level k). With a
+        mesh this is the *per-shard* capacity: each dispatch slice spans
+        capacity x num_shards pairs.
       backend_opts: forwarded to the backend constructor (e.g. batch_tile,
         chunk, interpret for pallas).
+      trim: sweep each group only t_max wavefront steps (max true n + m
+        of its members) instead of the full padded q_len + r_len.
+        Results are bit-identical either way; False exists for the
+        trimming-parity tests and benchmarks.
+      mesh: optional jax.sharding.Mesh — shard every dispatch slice's
+        batch dimension over `batch_axes` with shard_map (tile-level
+        parallelism, Fig. 6(a)).
+      batch_axes: mesh axes to shard over; None = every axis named
+        "pod"/"data" in the mesh (alignment never uses "model").
     """
 
     backend: object = "auto"
@@ -60,32 +104,92 @@ class AlignmentEngine:
     capacity: int = 64
     backend_opts: dict | None = None
     bucket_edges: tuple = DEFAULT_BUCKET_EDGES
+    trim: bool = True
+    mesh: object = None
+    batch_axes: tuple | None = None
 
     def __post_init__(self):
         self.backend = get_backend(self.backend,
                                    **(self.backend_opts or {}))
+        if self.mesh is not None and self.batch_axes is None:
+            self.batch_axes = tuple(a for a in self.mesh.axis_names
+                                    if a in ("pod", "data"))
+        self._runners: dict = {}
 
     @property
     def backend_name(self) -> str:
         return self.backend.name
 
+    @property
+    def num_shards(self) -> int:
+        """Mesh shards a dispatch slice spans (1 without a mesh)."""
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.batch_axes],
+                           dtype=np.int64))
+
+    # ------------------------------------------------------------------
+    # Mesh path: one jit'd shard_map program per dispatch signature.
+    # ------------------------------------------------------------------
+    def sharded_runner(self, *, band: int, collect_tb: bool = False,
+                       mode: str = "global", t_max: int | None = None):
+        """The jit'd shard_map'd backend program for one dispatch
+        signature (cached per engine). The batch dimension of every
+        argument shards over the mesh's `batch_axes`; because the
+        backend contract is jax-traceable and alignment is
+        embarrassingly parallel, the lowered program contains zero
+        collectives (asserted by tests/test_distributed.py)."""
+        if self.mesh is None:
+            raise ValueError("sharded_runner requires AlignmentEngine("
+                             "mesh=...)")
+        key = (band, collect_tb, mode, t_max)
+        fn = self._runners.get(key)
+        if fn is None:
+            import jax
+            from jax.sharding import PartitionSpec as P
+            from repro.core.distributed import shard_map
+
+            spec = P(self.batch_axes)
+
+            def local_align(q, r, n, m):
+                return self.backend.run(q, r, n, m, sc=self.sc, band=band,
+                                        adaptive=self.adaptive,
+                                        collect_tb=collect_tb, mode=mode,
+                                        t_max=t_max)
+
+            fn = jax.jit(shard_map(local_align, mesh=self.mesh,
+                                   in_specs=(spec, spec, spec, spec),
+                                   out_specs=spec))
+            self._runners[key] = fn
+        return fn
+
     # ------------------------------------------------------------------
     # Padded single-length-class path (jax arrays in, jax arrays out).
     # ------------------------------------------------------------------
     def align_arrays(self, q_pad, r_pad, n, m, *, band: int | None = None,
-                    mode: str = "global", collect_tb: bool = False):
+                    mode: str = "global", collect_tb: bool = False,
+                    t_max: int | None = None):
         """Align an already-padded single-class batch on the backend.
 
         The thin path used by `edit_distance_batch`, `core.distributed`
-        and the benchmarks; returns the raw backend result dict.
+        and the benchmarks; returns the raw backend result dict. With
+        `mesh=`, the batch shards over the mesh (its leading dimension
+        must divide by `num_shards`). `t_max` optionally trims the sweep
+        (caller guarantees t_max >= max true n + m).
         """
         if band is None:
             L = max(int(q_pad.shape[1]), int(r_pad.shape[1]))
             band = adaptive_bandwidth(L, default_base_bandwidth(
                 L, self.base_bandwidth))
+        _check_t_max(t_max, n, m)
+        if self.mesh is not None:
+            fn = self.sharded_runner(band=band, collect_tb=collect_tb,
+                                     mode=mode, t_max=t_max)
+            return fn(q_pad, r_pad, n, m)
         return self.backend.run(q_pad, r_pad, n, m, sc=self.sc, band=band,
                                 adaptive=self.adaptive,
-                                collect_tb=collect_tb, mode=mode)
+                                collect_tb=collect_tb, mode=mode,
+                                t_max=t_max)
 
     # ------------------------------------------------------------------
     # Ragged multi-bucket path (lists in, original-order numpy out).
@@ -94,6 +198,13 @@ class AlignmentEngine:
               collect_tb: bool = False):
         """Align ragged (read, reference) lists through the multi-bucket
         scheduler.
+
+        The dispatch pipeline overlaps host and device with a depth-1
+        lookahead: group k+1's capacity slices are enqueued on-device
+        (async — no host sync) *before* group k is fetched and decoded,
+        so the host CIGAR-decodes group k while the device computes
+        group k+1, and at most two groups' result buffers are live at
+        once (bounded memory at any request size).
 
         Returns a dict of (N,) arrays in the caller's original order:
         the SCALAR_KEYS plus 'band' (the per-read band width actually
@@ -113,15 +224,39 @@ class AlignmentEngine:
                               base_bandwidth=self.base_bandwidth,
                               capacity=self.capacity,
                               edges=self.bucket_edges)
-        for g in groups:
+        shards = self.num_shards
+
+        def enqueue(g):
             idx = g.indices
-            q_pad, r_pad, n, m = pad_group([reads[i] for i in idx],
-                                           [refs[i] for i in idx], g.spec)
-            merged = run_dispatch(
-                self.backend, q_pad, r_pad, n, m, sc=self.sc,
-                band=g.spec.band, capacity=g.spec.capacity,
-                num_real=len(idx), adaptive=self.adaptive,
-                collect_tb=collect_tb, mode=mode)
+            t_max = g.spec.t_max if self.trim else None
+            q_pad, r_pad, n, m = pad_group(
+                [reads[i] for i in idx], [refs[i] for i in idx], g.spec,
+                pad_multiple=g.spec.capacity * shards)
+            if self.mesh is not None:
+                run = self.sharded_runner(
+                    band=g.spec.band, collect_tb=collect_tb, mode=mode,
+                    t_max=t_max)
+            else:
+                run = functools.partial(
+                    self.backend.run, sc=self.sc, band=g.spec.band,
+                    adaptive=self.adaptive, collect_tb=collect_tb,
+                    mode=mode, t_max=t_max)
+            outs = enqueue_dispatch(run, q_pad, r_pad, n, m,
+                                    capacity=g.spec.capacity * shards)
+            return g, n, m, outs
+
+        # Depth-1 lookahead pipeline: group k+1 is enqueued on-device
+        # before group k is materialised, so decode overlaps compute
+        # while only two groups' buffers are ever live.
+        pending = enqueue(groups[0]) if groups else None
+        for k in range(len(groups)):
+            g, n, m, outs = pending
+            pending = enqueue(groups[k + 1]) if k + 1 < len(groups) \
+                else None
+            idx = g.indices
+            merged = finalize_dispatch(outs, n, m, band=g.spec.band,
+                                       num_real=len(idx),
+                                       collect_tb=collect_tb, mode=mode)
             for key in SCALAR_KEYS:
                 out[key][idx] = merged[key]
             out["band"][idx] = g.spec.band
@@ -134,4 +269,4 @@ class AlignmentEngine:
 
 
 __all__ = ["AlignmentEngine", "SCALAR_KEYS", "available_backends",
-           "get_backend", "resolve_backend"]
+           "get_backend", "resolve_backend", "run_dispatch"]

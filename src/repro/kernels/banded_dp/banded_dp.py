@@ -247,7 +247,8 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
 def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
                         adaptive: bool = True, collect_tb: bool = True,
                         mode: str = "global", batch_tile: int = 8,
-                        chunk: int = 128, interpret: bool = True):
+                        chunk: int = 128, interpret: bool = True,
+                        t_max: int | None = None):
     """pl.pallas_call wrapper. See ops.banded_align_kernel_batch for the
     public jit'd API (padding, reshaping, traceback plumbing).
 
@@ -261,6 +262,10 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
       mode: "global" or "semiglobal" (free reference-end gaps).
       chunk: wavefront steps per grid step (traceback block height).
       interpret: run the kernel body in interpret mode (CPU validation).
+      t_max: trimmed sweep length (must be >= max true n + m over the
+        batch): the step-chunk grid shrinks to ceil(t_max / chunk)
+        chunks, so a short-read batch in a long bucket stops sweeping
+        dead diagonals. None = full Lq + Lr sweep.
     """
     N, Lq = q_pad.shape
     Lr = r_pad.shape[1]
@@ -268,7 +273,7 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
     if N % bt:
         raise ValueError(f"N={N} not divisible by batch_tile={bt}")
     nb = N // bt
-    T = Lq + Lr
+    T = int(t_max) if t_max is not None else Lq + Lr
     T_pad = int(-(-T // chunk) * chunk)
     n_chunks = T_pad // chunk
 

@@ -18,14 +18,16 @@ def banded_align_kernel_batch(q_pad, r_pad, n, m, *, sc: ScoringConfig,
                               band: int, adaptive: bool = True,
                               collect_tb: bool = True, mode: str = "global",
                               batch_tile: int = 8, chunk: int = 128,
-                              interpret: bool = True):
+                              interpret: bool = True,
+                              t_max: int | None = None):
     """Kernel-path batched alignment.
 
     Pads the batch up to a multiple of batch_tile with dummy pairs, runs
     the Pallas wavefront, and strips the padding. Returns the same result
     dict as `core.banded.banded_align_batch`: always 'score', 'final_lo',
     'best_score', 'best_i', 'best_j' (each (N,) int32); with collect_tb
-    also 'tb' ((N, T, B) uint8) and 'los' ((N, T+1) int32).
+    also 'tb' ((N, T, B) uint8) and 'los' ((N, T+1) int32), where
+    T = t_max (the trimmed sweep length, >= max true n + m) or Lq + Lr.
     """
     q_pad = jnp.asarray(q_pad)
     r_pad = jnp.asarray(r_pad)
@@ -45,5 +47,5 @@ def banded_align_kernel_batch(q_pad, r_pad, n, m, *, sc: ScoringConfig,
     out = banded_align_pallas(q_pad, r_pad, n, m, sc=sc, band=band,
                               adaptive=adaptive, collect_tb=collect_tb,
                               mode=mode, batch_tile=batch_tile,
-                              chunk=chunk, interpret=interpret)
+                              chunk=chunk, interpret=interpret, t_max=t_max)
     return {k: v[:N] for k, v in out.items()}

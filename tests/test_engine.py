@@ -197,3 +197,91 @@ def test_auto_backend_resolves():
     assert resolve_backend("auto") in ("reference", "pallas")
     eng = AlignmentEngine(backend="auto")
     assert eng.backend_name in ("reference", "pallas")
+    # The platform probe is cached: repeated resolution is pure lookup.
+    import repro.core.backends as B
+    assert B._AUTO_RESOLVED == resolve_backend("auto")
+
+
+# ---------------------------------------------------------------------------
+# Scheduler edge cases + wavefront trimming.
+# ---------------------------------------------------------------------------
+
+def test_empty_request():
+    eng = AlignmentEngine(backend="reference")
+    out = eng.align([], [], collect_tb=True)
+    for k in SCALARS + ("band",):
+        assert out[k].shape == (0,)
+    assert out["cigars"] == []
+
+
+def test_single_pair():
+    reads, refs = _mixed_reads(1, (75,), seed=29)
+    eng = AlignmentEngine(backend="reference")
+    out = eng.align(reads, refs, collect_tb=True)
+    single = banded_align(jnp.asarray(reads[0]), jnp.asarray(refs[0]),
+                          len(reads[0]), len(refs[0]), sc=MINIMAP2,
+                          band=int(out["band"][0]))
+    assert out["score"].shape == (1,)
+    assert int(single["score"]) == out["score"][0]
+    assert out["cigars"][0]
+
+
+def test_capacity_one():
+    """capacity=1 degenerates to one dispatch slice per pair and must
+    still scatter every result home."""
+    reads, refs = _mixed_reads(5, (40, 90), seed=41)
+    eng1 = AlignmentEngine(backend="reference", capacity=1)
+    eng64 = AlignmentEngine(backend="reference", capacity=64)
+    o1 = eng1.align(reads, refs, collect_tb=True)
+    o64 = eng64.align(reads, refs, collect_tb=True)
+    for k in SCALARS + ("band",):
+        np.testing.assert_array_equal(o1[k], o64[k], err_msg=k)
+    assert o1["cigars"] == o64["cigars"]
+
+
+def test_lengths_above_largest_bucket_edge():
+    """Pairs longer than the largest configured edge land in a pow2
+    overflow class and still round-trip correctly."""
+    reads, refs = _mixed_reads(6, (50, 200), seed=31)
+    eng = AlignmentEngine(backend="reference", capacity=4,
+                          bucket_edges=(64, 128))
+    groups = plan_buckets([len(x) for x in reads], [len(x) for x in refs],
+                          edges=(64, 128))
+    assert max(max(g.spec.q_len, g.spec.r_len) for g in groups) > 128
+    out = eng.align(reads, refs, collect_tb=False)
+    for i in range(len(reads)):
+        single = banded_align(jnp.asarray(reads[i]), jnp.asarray(refs[i]),
+                              len(reads[i]), len(refs[i]), sc=MINIMAP2,
+                              band=int(out["band"][i]))
+        assert int(single["score"]) == out["score"][i], i
+
+
+def test_align_arrays_rejects_short_t_max():
+    """A trimmed sweep shorter than some pair's true n + m would silently
+    truncate that alignment — concrete-length callers get an error."""
+    q, r, n, m = simulate_read_pairs(4, 100, "illumina", seed=43)
+    eng = AlignmentEngine(backend="reference")
+    with pytest.raises(ValueError, match="t_max"):
+        eng.align_arrays(jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
+                         jnp.asarray(m), band=16, t_max=64)
+
+
+@pytest.mark.parametrize("mode", ["global", "semiglobal"])
+def test_trimming_parity_both_backends(mode):
+    """Trimmed sweeps (t_max = max true n+m) return bit-identical scores
+    and CIGARs to the full padded sweep on both backends."""
+    reads, refs = _mixed_reads(8, (40, 100, 150), seed=37)
+    groups = plan_buckets([len(x) for x in reads], [len(x) for x in refs])
+    # The mix must actually trim something, or this test is vacuous.
+    assert any(g.spec.t_max < g.spec.q_len + g.spec.r_len for g in groups)
+    for backend, opts in (("reference", None), ("pallas", PALLAS_OPTS)):
+        eng_t = AlignmentEngine(backend=backend, capacity=4,
+                                backend_opts=opts, trim=True)
+        eng_u = AlignmentEngine(backend=backend, capacity=4,
+                                backend_opts=opts, trim=False)
+        o_t = eng_t.align(reads, refs, mode=mode, collect_tb=True)
+        o_u = eng_u.align(reads, refs, mode=mode, collect_tb=True)
+        for k in SCALARS + ("band",):
+            np.testing.assert_array_equal(o_t[k], o_u[k],
+                                          err_msg=f"{backend}/{k}")
+        assert o_t["cigars"] == o_u["cigars"], backend
