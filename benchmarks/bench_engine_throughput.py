@@ -15,22 +15,29 @@ sweep is infeasible in interpret mode on CPU):
 
   engine/mixed_trimmed      trimmed sweep (t_max = max true n + m)
   engine/mixed_untrimmed    full padded q_len + r_len sweep
+  engine/tb_fetch_decode    packed traceback plane: bytes fetched per
+                            pair per dispatch (2 flags/byte, DESIGN.md
+                            §5) + batched nibble-decode wall time
   engine/ragged_tb_pipeline multi-class ragged request with CIGAR decode
                             through the async enqueue/finalize pipeline
 
-The trimmed row's `derived` records speedup_vs_untrimmed — the perf
-trajectory number captured in BENCH_engine.json (acceptance: >= 2x).
+The trimmed row's `derived` records speedup_vs_untrimmed and the
+tb_fetch_decode row's records tb_bytes_per_pair / pack_ratio — the perf
+trajectory numbers captured in BENCH_engine.json (acceptance: trimming
+>= 2x; pack_ratio ~= 2, the halved TBM/host traffic).
 """
 
 from __future__ import annotations
 
 import sys
 
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_host_fn, time_host_paired
 from repro.core import MINIMAP2, AlignmentEngine
-from repro.core.batch import plan_buckets
+from repro.core.banded import traceback_banded_batch
+from repro.core.batch import AlignmentBatch, plan_buckets
 
 #: Long/short true lengths. The long side sits just above the 512 bucket
 #: edge, so the group's padded geometry is 1024/1024 (T_full = 2048)
@@ -112,6 +119,26 @@ def run(backends=("reference", "pallas"), smoke=False):
              f"T_full={T_full};n_pairs={n_pairs}", backend=backend)
         emit("engine/mixed_untrimmed", us_u / n_pairs,
              f"T_full={T_full};n_pairs={n_pairs}", backend=backend)
+
+        # Packed traceback plane: the tb bytes one dispatch group
+        # actually fetches to the host (2 flags per byte — half the
+        # one-flag-per-byte layout's N x T x B) and the wall time of the
+        # batched nibble decode over that packed plane.
+        batch = AlignmentBatch.from_lists(reads, refs, capacity=n_pairs)
+        spec = batch.spec
+        out = eng_t.align_arrays(
+            jnp.asarray(batch.q_pad), jnp.asarray(batch.r_pad),
+            jnp.asarray(batch.n), jnp.asarray(batch.m), band=spec.band,
+            collect_tb=True, t_max=spec.t_max)
+        tb, los = np.asarray(out["tb"]), np.asarray(out["los"])
+        unpacked_bytes = tb.shape[0] * tb.shape[1] * spec.band
+        us_d = time_host_fn(traceback_banded_batch, tb, los,
+                            batch.n, batch.m, spec.band, iters=iters)
+        emit("engine/tb_fetch_decode", us_d / n_pairs,
+             f"tb_bytes_per_pair={tb.nbytes // tb.shape[0]};"
+             f"unpacked_bytes_per_pair={unpacked_bytes // tb.shape[0]};"
+             f"pack_ratio={unpacked_bytes / tb.nbytes:.2f};"
+             f"band={spec.band};t_max={spec.t_max}", backend=backend)
 
         # Multi-class ragged request through the async enqueue/finalize
         # pipeline, CIGAR decode included (the serving-shaped number).

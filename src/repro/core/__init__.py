@@ -8,7 +8,9 @@ from repro.core.full_dp import (FullDPResult, cigar_score, full_dp_align,
                                 traceback_full)
 from repro.core.diff_dp import DiffDPResult, diff_dp, range_report, serial_eq2
 from repro.core.banded import (banded_align, banded_align_batch,
-                               traceback_banded, traceback_banded_batch)
+                               pack_tb_lanes, packed_tb_width,
+                               traceback_banded, traceback_banded_batch,
+                               unpack_tb_lanes)
 from repro.core.batch import (AlignmentBatch, BucketSpec, DispatchGroup,
                               align_batch, make_bucket, plan_buckets)
 from repro.core.edit_distance import (edit_distance, edit_distance_batch,

@@ -8,10 +8,19 @@ contract (see DESIGN.md §3):
     run(q_pad, r_pad, n, m, *, sc, band, adaptive, collect_tb, mode,
         t_max)
       -> dict with (N,) int32 'score', 'final_lo', 'best_score',
-         'best_i', 'best_j'; plus 'tb' ((N, T, B) uint8) and 'los'
-         ((N, T+1) int32) when collect_tb, where T is the static
+         'best_i', 'best_j'; plus 'tb' ((N, T, ceil(B/2)) uint8) and
+         'los' ((N, T+1) int32) when collect_tb, where T is the static
          trimmed sweep length t_max (>= max true n + m over the batch)
          or the full padded Lq + Lr when t_max is None.
+
+The traceback plane is *packed*: two 4-bit flags per byte, even band
+lane in the low nibble, odd lane in the high nibble; for odd B the last
+byte holds a single valid nibble (`core.banded.pack_tb_lanes` is the
+canonical layout, DESIGN.md §5). Backends must produce the packed plane
+directly — packing happens inside the compute (scan step / kernel
+register file), never as a post-pass, so tb bytes moved per dispatch are
+ceil(B/2) x T x N on every path. `traceback_banded_batch` decodes the
+packed plane in place.
 
 `run` must be jax-traceable (it is called under jit / shard_map by
 `core.distributed`). Results are bit-identical across backends — integer

@@ -42,6 +42,61 @@ from repro.core.scoring import ScoringConfig
 NEG = jnp.int32(-(1 << 28))
 DEAD_THRESHOLD = -(1 << 27)
 
+# ---------------------------------------------------------------------------
+# Packed traceback-plane layout (paper §III / §V-C3: 4-bit flags are the
+# whole point of RAPIDx's narrow-bit-width co-design — storing them one per
+# byte would double TBM traffic). Two band lanes share one byte:
+#
+#     packed[..., b] = flags(lane 2b) | flags(lane 2b+1) << 4
+#
+# i.e. the EVEN lane rides the LOW nibble and the ODD lane the HIGH nibble.
+# For odd band widths the last byte carries a single valid nibble (lane
+# B-1 in its low nibble) and its high nibble is zero. See DESIGN.md §5.
+# ---------------------------------------------------------------------------
+
+#: Traceback flags packed per plane byte (two 4-bit flags).
+TB_LANES_PER_BYTE = 2
+
+
+def packed_tb_width(band: int) -> int:
+    """Bytes per wavefront step of the packed traceback plane:
+    ``ceil(band / 2)`` — the last byte is half-empty when ``band`` is odd."""
+    return (band + 1) // 2
+
+
+def pack_tb_lanes(code):
+    """Pack 4-bit traceback flags two-per-byte along the last axis.
+
+    ``code`` is any-rank uint8/int32 with lane axis last (values < 16);
+    returns uint8 of shape ``(..., ceil(B / 2))`` in the low/high-nibble
+    layout above. jnp-traceable: this runs inside the reference backend's
+    `lax.scan` step and the Pallas kernel's register file, so the unpacked
+    plane never exists in HBM or on the host. Implemented as strided
+    lane slices + shift/or (no reshape that splits the minor axis —
+    the friendlier form for Mosaic's TPU layout rules).
+    """
+    *lead, B = code.shape
+    low = code[..., 0::2].astype(jnp.int32)    # ceil(B/2) even lanes
+    high = code[..., 1::2].astype(jnp.int32)   # floor(B/2) odd lanes
+    if B % 2:  # odd B: the last byte's high nibble is zero padding
+        high = jnp.concatenate(
+            [high, jnp.zeros((*lead, 1), jnp.int32)], axis=-1)
+    return (low | (high << 4)).astype(jnp.uint8)
+
+
+def unpack_tb_lanes(packed, band: int) -> np.ndarray:
+    """Inverse of `pack_tb_lanes` (numpy, host-side).
+
+    Debug/test helper only — the production decoders
+    (`traceback_banded`, `traceback_banded_batch`) read nibbles straight
+    from the packed plane and never materialise the unpacked layout.
+    """
+    packed = np.asarray(packed)
+    out = np.empty((*packed.shape[:-1], packed.shape[-1] * 2), np.uint8)
+    out[..., 0::2] = packed & 0xF
+    out[..., 1::2] = packed >> 4
+    return out[..., :band]
+
 
 class BandState(NamedTuple):
     lo: jnp.ndarray        # int32 — top row of the band on the current diag
@@ -164,6 +219,9 @@ def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
         code = (direction + 4 * ext_e.astype(jnp.int32)
                 + 8 * ext_f.astype(jnp.int32)).astype(jnp.uint8)
         code = jnp.where(interior, code, jnp.uint8(0))
+        # Pack two lanes per byte inside the scan step: the (B,) flag
+        # vector never leaves the step unpacked (DESIGN.md §5).
+        code = pack_tb_lanes(code)
     else:
         code = None
 
@@ -257,8 +315,9 @@ def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
         freezes past t = n + m. None = full padded sweep.
 
     Returns a dict with 'score' (int32), and when collect_tb: 'tb'
-    ((T, B) uint8 flags) and 'los' ((T+1,) int32 band offsets, los[0]=0),
-    where T = t_max or n_pad + m_pad.
+    ((T, ceil(B/2)) uint8 — 4-bit flags packed two lanes per byte, even
+    lane in the low nibble; see `pack_tb_lanes`) and 'los' ((T+1,) int32
+    band offsets, los[0]=0), where T = t_max or n_pad + m_pad.
     """
     q_pad = q_pad.astype(jnp.int32)
     r_pad = r_pad.astype(jnp.int32)
@@ -299,13 +358,16 @@ def banded_align_batch(q_batch, r_batch, n_batch, m_batch, *, sc, band,
 
 def traceback_banded(tb: np.ndarray, los: np.ndarray, n: int, m: int,
                      band: int) -> list[tuple[str, int]]:
-    """Decode the (T, B) flag plane into a CIGAR.
+    """Decode one packed (T, ceil(B/2)) flag plane into a CIGAR.
 
-    tb[t-1, k] holds the flags of cell (i, j) with i + j = t and
-    k = i - los[t]. Flags: bits 0-1 direction (0 diag / 1 E / 2 F),
-    bit 2 E-extend, bit 3 F-extend (the extend bit of cell (i,j) describes
-    the E/F value *entering* cell (i+1,j) / (i,j+1), per the Eq. (4)
-    regrouping).
+    Lane k of step t (the cell (i, j) with i + j = t and k = i - los[t])
+    lives in byte ``tb[t-1, k // 2]``: low nibble for even k, high nibble
+    for odd k (`pack_tb_lanes` layout). Flags: bits 0-1 direction
+    (0 diag / 1 E / 2 F), bit 2 E-extend, bit 3 F-extend (the extend bit
+    of cell (i,j) describes the E/F value *entering* cell (i+1,j) /
+    (i,j+1), per the Eq. (4) regrouping).
+
+    Per-pair oracle — the production path is `traceback_banded_batch`.
     """
     tb = np.asarray(tb)
     los = np.asarray(los)
@@ -315,7 +377,7 @@ def traceback_banded(tb: np.ndarray, los: np.ndarray, n: int, m: int,
         k = i - int(los[t])
         if t < 1 or k < 0 or k >= band:
             return None  # path escaped the band: heuristic loss
-        return int(tb[t - 1, k])
+        return (int(tb[t - 1, k >> 1]) >> ((k & 1) * 4)) & 0xF
 
     ops: list[str] = []
     i, j = n, m
@@ -386,8 +448,14 @@ def traceback_banded_batch(tb: np.ndarray, los: np.ndarray, n, m,
     of a per-pair Python loop. Semantics are identical to per-pair
     `traceback_banded` (same flag encoding, same band-escape fallback).
 
+    Decodes straight from the *packed* plane: each flag lookup is one byte
+    gather plus a shift/mask nibble select, so the unpacked (N, T, B)
+    layout is never materialised on the host (the host fetch per dispatch
+    group is the packed ceil(B/2)-byte rows the backend produced).
+
     Args:
-      tb: (N, T, B) uint8 flag planes.
+      tb: (N, T, ceil(B/2)) uint8 packed flag planes (`pack_tb_lanes`
+        layout: even lane in the low nibble, odd lane in the high nibble).
       los: (N, T+1) int32 band offsets.
       n, m: (N,) true lengths (the default traceback start cells).
       band: band width B shared by the group.
@@ -418,11 +486,14 @@ def traceback_banded_batch(tb: np.ndarray, los: np.ndarray, n, m,
 
     def lookup(ii, jj):
         """Flags at (ii, jj) per pair + in-band validity (t >= 1 and the
-        lane inside [0, band))."""
+        lane inside [0, band)). One byte gather from the packed plane,
+        then a nibble select by lane parity."""
         t = ii + jj
         k = ii - los[idx, np.clip(t, 0, los.shape[1] - 1)]
         ok = (t >= 1) & (k >= 0) & (k < band)
-        c = tb[idx, np.clip(t - 1, 0, T - 1), np.clip(k, 0, band - 1)]
+        kc = np.clip(k, 0, band - 1)
+        byte = tb[idx, np.clip(t - 1, 0, T - 1), kc >> 1]
+        c = (byte >> ((kc & 1) * 4).astype(np.uint8)) & 0xF
         return c, ok
 
     while True:

@@ -202,7 +202,10 @@ def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
     only on *this* group's device work), strip dummy padding down to
     `num_real`, and — when collect_tb — decode every CIGAR at once with
     the vectorised `traceback_banded_batch` (semiglobal paths start from
-    the tracked best cell)."""
+    the tracked best cell). The tb buffer fetched here is the *packed*
+    (k, T, ceil(B/2)) plane — half the host-fetch bytes of a
+    one-flag-per-byte layout — and the decoder reads nibbles from it
+    directly."""
     merged = {}
     for key in outs[0]:
         merged[key] = np.concatenate(

@@ -27,7 +27,8 @@ def edit_distance_batch(q_pad, r_pad, n, m, *, band: int | None = None,
     Runs the degenerate scoring through the selected execution backend
     ('reference', 'pallas', 'auto') — the paper's reconfigurable data
     flow: same engine, different scoring constants. Returns dict with
-    'distance' ((B,) int32) and optionally the traceback planes.
+    'distance' ((B,) int32) and optionally the traceback planes ('tb' is
+    the packed (N, T, ceil(band/2)) layout of the backend contract).
     distance = -score under the EDIT_DISTANCE scoring.
     """
     if band is None:

@@ -23,8 +23,11 @@ engine
      inter-tile communication, so the lowered program has zero
      collectives) — one capacity block per shard per slice,
   4. scatters results back into the caller's original read order, and
-  5. when tracebacks are requested, decodes every group's (T, B) flag
-     planes at once with the vectorised `traceback_banded_batch`.
+  5. when tracebacks are requested, decodes every group's packed
+     (T, ceil(B/2)) flag planes at once with the vectorised
+     `traceback_banded_batch` — the host fetch per dispatch is the
+     packed plane (two 4-bit flags per byte, DESIGN.md §5); no unpacked
+     intermediate is ever materialised.
 
 All backends return bit-identical results (integer DP) — the engine is a
 pure scheduling layer. Layering and the backend contract are documented
@@ -209,8 +212,9 @@ class AlignmentEngine:
         Returns a dict of (N,) arrays in the caller's original order:
         the SCALAR_KEYS plus 'band' (the per-read band width actually
         used); with collect_tb also 'cigars' (list of N CIGARs, decoded
-        per group by the vectorised batched traceback; semiglobal CIGARs
-        start from the tracked best cell on the last read row).
+        per group by the vectorised batched traceback straight from the
+        packed ceil(B/2)-byte flag plane; semiglobal CIGARs start from
+        the tracked best cell on the last read row).
         """
         if len(reads) != len(refs):
             raise ValueError("reads and refs must pair up")

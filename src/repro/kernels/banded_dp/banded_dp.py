@@ -21,9 +21,11 @@ advances the wavefront `chunk` steps and writes one (chunk, bt, B) block
 of traceback flags. State is (re)initialised when the chunk index is 0.
 
 Storage precision: band state is computed in int32 (native VPU lane width)
-and the difference quantities provably fit the paper's 5-bit range — the
-traceback plane is uint8 (4 bits used). See DESIGN.md §6 for why TPU has
-no profitable sub-byte path.
+and the difference quantities provably fit the paper's 5-bit range. The
+traceback plane is packed **two 4-bit flags per uint8 byte** in-register
+before the TBM store (`core.banded.pack_tb_lanes` layout: even lane in the
+low nibble), so the per-step store is ceil(B/2) bytes per pair — half the
+TBM traffic of a one-flag-per-byte plane. See DESIGN.md §5/§6.
 """
 
 from __future__ import annotations
@@ -35,6 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.banded import pack_tb_lanes, packed_tb_width
 from repro.core.scoring import ScoringConfig
 
 NEG = -(1 << 28)   # plain ints: pallas kernels must not capture jax arrays
@@ -161,6 +164,14 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
             ext_f = ((y_arm + o) > a_new).astype(jnp.int32)
             code = (direction + 4 * ext_e + 8 * ext_f).astype(jnp.uint8)
             code = jnp.where(interior, code, jnp.uint8(0))
+            # Pack two lanes per byte in-register: only the packed
+            # (bt, ceil(B/2)) rows ever reach the TBM store below.
+            # NOTE: validated bit-exact in interpret mode; the stride-2
+            # lane slices in pack_tb_lanes have not yet been lowered
+            # through Mosaic on a real TPU — if compile rejects them,
+            # fall back to packing just before the tb_ref store via a
+            # (bt, Bp, 2) reshape, or pad B to even.
+            code = pack_tb_lanes(code)
         else:
             code = None
 
@@ -283,14 +294,15 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
 
     stats_shape = jax.ShapeDtypeStruct((nb, bt, STATS_W), jnp.int32)
     stats_spec = pl.BlockSpec((1, bt, STATS_W), lambda b, t: (b, 0, 0))
+    Bp = packed_tb_width(band)  # two 4-bit flags per tb byte
     if collect_tb:
         out_shapes = (
-            jax.ShapeDtypeStruct((nb, T_pad, bt, band), jnp.uint8),  # tb
-            jax.ShapeDtypeStruct((nb, T_pad, bt), jnp.int32),        # lo/diag
+            jax.ShapeDtypeStruct((nb, T_pad, bt, Bp), jnp.uint8),  # tb
+            jax.ShapeDtypeStruct((nb, T_pad, bt), jnp.int32),      # lo/diag
             stats_shape,
         )
         out_specs = (
-            pl.BlockSpec((1, chunk, bt, band), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, chunk, bt, Bp), lambda b, t: (b, t, 0, 0)),
             pl.BlockSpec((1, chunk, bt), lambda b, t: (b, t, 0)),
             stats_spec,
         )
@@ -346,7 +358,7 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
     if collect_tb:
         tb, los = outs[0], outs[1]
         # Reassemble to (N, ...) batch-major layouts matching core.banded.
-        tb = tb.transpose(0, 2, 1, 3).reshape(N, T_pad, band)[:, :T]
+        tb = tb.transpose(0, 2, 1, 3).reshape(N, T_pad, Bp)[:, :T]
         los = los.transpose(0, 2, 1).reshape(N, T_pad)[:, :T]
         los = jnp.concatenate([jnp.zeros((N, 1), jnp.int32), los], axis=1)
         out["tb"] = tb

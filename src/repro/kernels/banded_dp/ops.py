@@ -26,8 +26,10 @@ def banded_align_kernel_batch(q_pad, r_pad, n, m, *, sc: ScoringConfig,
     the Pallas wavefront, and strips the padding. Returns the same result
     dict as `core.banded.banded_align_batch`: always 'score', 'final_lo',
     'best_score', 'best_i', 'best_j' (each (N,) int32); with collect_tb
-    also 'tb' ((N, T, B) uint8) and 'los' ((N, T+1) int32), where
-    T = t_max (the trimmed sweep length, >= max true n + m) or Lq + Lr.
+    also 'tb' ((N, T, ceil(B/2)) uint8 — 4-bit flags packed two lanes per
+    byte, `core.banded.pack_tb_lanes` layout) and 'los' ((N, T+1) int32),
+    where T = t_max (the trimmed sweep length, >= max true n + m) or
+    Lq + Lr.
     """
     q_pad = jnp.asarray(q_pad)
     r_pad = jnp.asarray(r_pad)

@@ -11,6 +11,7 @@ from repro.core.banded import banded_align_batch
 
 
 def banded_align_ref_batch(q_pad, r_pad, n, m, *, sc, band, adaptive=True):
-    """Reference result dict with 'score', 'tb' (N,T,B), 'los' (N,T+1)."""
+    """Reference result dict with 'score', 'tb' (N, T, ceil(B/2) packed),
+    'los' (N, T+1)."""
     return banded_align_batch(q_pad, r_pad, n, m, sc=sc, band=band,
                               adaptive=adaptive, collect_tb=True)

@@ -71,8 +71,11 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
 
     Per wavefront step each lane does ~15 int32 VPU ops (Eq. 4 update +
     masks + traceback encode); a pair of length L runs 2L steps over B
-    lanes. Traceback streams (2L x B) uint8 to HBM; sequences stream in
-    once. Collectives are zero by construction (tile independence).
+    lanes (equal-length pairs: the trimmed sweep t_max equals the true
+    n + m = 2L). Traceback streams the *packed* plane — two 4-bit flags
+    per byte, (2L x ceil(B/2)) uint8 per pair (DESIGN.md §5) — to HBM;
+    sequences stream in once. Collectives are zero by construction
+    (tile independence).
     """
     L = record["length"]
     B_band = record["band"]
@@ -84,7 +87,7 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
     pairs_dev = batch / min(dp, batch)
     ops = 2 * L * B_band * 15  # int ops per pair
     flops_dev = pairs_dev * ops
-    tb_bytes = 2 * L * B_band  # uint8 traceback plane per pair
+    tb_bytes = 2 * L * ((B_band + 1) // 2)  # packed tb plane per pair
     seq_bytes = 2 * L * 4
     bytes_dev = pairs_dev * (tb_bytes + seq_bytes)
     terms = roofline_terms(flops_dev, bytes_dev, 0.0, hw)

@@ -1,0 +1,196 @@
+"""Packed 2-per-byte traceback planes (DESIGN.md §5).
+
+The backend contract stores two 4-bit flags per tb byte — halved TBM
+traffic and host fetch. These tests pin down (a) the nibble layout of the
+pack/unpack helpers, (b) the halved plane shape on both backends, (c)
+bit-exact CIGAR parity against a golden decoder that walks the *unpacked*
+plane with the pre-packing indexing, and (d) the odd-band-width tail rule
+(last byte carries a single valid nibble).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import MINIMAP2, AlignmentEngine, cigar_score
+from repro.core.banded import (TB_LANES_PER_BYTE, pack_tb_lanes,
+                               packed_tb_width, traceback_banded,
+                               traceback_banded_batch, unpack_tb_lanes)
+from repro.core.backends import get_backend
+from repro.data.genome import simulate_read_pairs
+
+PALLAS_OPTS = {"batch_tile": 4, "chunk": 32}
+
+BACKENDS = [("reference", {}), ("pallas", PALLAS_OPTS)]
+
+
+# ---------------------------------------------------------------------------
+# Nibble layout of the pack/unpack helpers.
+# ---------------------------------------------------------------------------
+
+def test_pack_layout_even_band():
+    """Even lane -> low nibble, odd lane -> high nibble, in lane order."""
+    code = np.array([[1, 2, 3, 4], [0xF, 0, 8, 5]], np.uint8)
+    packed = np.asarray(pack_tb_lanes(jnp.asarray(code)))
+    expected = np.array([[1 | (2 << 4), 3 | (4 << 4)],
+                         [0xF | (0 << 4), 8 | (5 << 4)]], np.uint8)
+    np.testing.assert_array_equal(packed, expected)
+    assert packed.dtype == np.uint8
+
+
+def test_pack_layout_odd_band_tail_rule():
+    """Odd B: the last byte holds lane B-1 in its low nibble; the high
+    nibble is zero padding."""
+    code = np.array([[1, 2, 3, 4, 5]], np.uint8)
+    packed = np.asarray(pack_tb_lanes(jnp.asarray(code)))
+    assert packed.shape == (1, 3)
+    assert packed[0, 2] == 5  # low nibble = lane 4, high nibble = 0
+    assert (packed[0, 2] >> 4) == 0
+
+
+@pytest.mark.parametrize("band", [1, 2, 7, 16, 25])
+def test_pack_unpack_round_trip(band):
+    rng = np.random.default_rng(band)
+    code = rng.integers(0, 16, (3, 11, band)).astype(np.uint8)
+    packed = np.asarray(pack_tb_lanes(jnp.asarray(code)))
+    assert packed.shape == (3, 11, packed_tb_width(band))
+    assert packed_tb_width(band) == -(-band // TB_LANES_PER_BYTE)
+    np.testing.assert_array_equal(unpack_tb_lanes(packed, band), code)
+
+
+# ---------------------------------------------------------------------------
+# Golden decoder: the pre-packing per-pair traceback walking the UNPACKED
+# (T, B) plane with direct tb[t-1, k] indexing. Packed decode must match
+# it bit-exactly (same flags, halved storage).
+# ---------------------------------------------------------------------------
+
+def _golden_traceback_unpacked(tb, los, n, m, band):
+    tb = np.asarray(tb)
+    los = np.asarray(los)
+
+    def code(i, j):
+        t = i + j
+        k = i - int(los[t])
+        if t < 1 or k < 0 or k >= band:
+            return None
+        return int(tb[t - 1, k])
+
+    ops = []
+    i, j = n, m
+    state = "M"
+    while i > 0 or j > 0:
+        if i == 0:
+            ops.append("D"); j -= 1; continue
+        if j == 0:
+            ops.append("I"); i -= 1; continue
+        c = code(i, j)
+        if c is None:
+            ops.append("M"); i -= 1; j -= 1; continue
+        if state == "M":
+            d = c & 3
+            if d == 0:
+                ops.append("M"); i -= 1; j -= 1
+            elif d == 1:
+                state = "E"
+            else:
+                state = "F"
+        elif state == "E":
+            ops.append("I")
+            up = code(i - 1, j)
+            ext = bool(up & 4) if (up is not None and i - 1 >= 1
+                                   and j >= 1) else False
+            i -= 1
+            if not ext:
+                state = "M"
+        else:
+            ops.append("D")
+            left = code(i, j - 1)
+            ext = bool(left & 8) if (left is not None and j - 1 >= 1
+                                     and i >= 1) else False
+            j -= 1
+            if not ext:
+                state = "M"
+    ops.reverse()
+    cigar = []
+    for op in ops:
+        if cigar and cigar[-1][0] == op:
+            cigar[-1] = (op, cigar[-1][1] + 1)
+        else:
+            cigar.append((op, 1))
+    return cigar
+
+
+@pytest.mark.parametrize("backend,opts", BACKENDS,
+                         ids=[b for b, _ in BACKENDS])
+@pytest.mark.parametrize("mode", ["global", "semiglobal"])
+@pytest.mark.parametrize("band", [24, 25], ids=["evenB", "oddB"])
+def test_packed_plane_matches_golden_cigars(backend, opts, mode, band):
+    """Both backends x both modes x even/odd band: the packed plane is
+    halved byte-for-byte, and decoding it (batch + per-pair) reproduces
+    the golden CIGARs of the unpacked-plane walk bit-exactly."""
+    q, r, n, m = simulate_read_pairs(6, 70, "ont_2d", seed=5)
+    bk = get_backend(backend, **opts)
+    out = bk.run(jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
+                 jnp.asarray(m), sc=MINIMAP2, band=band, collect_tb=True,
+                 mode=mode)
+    tb, los = np.asarray(out["tb"]), np.asarray(out["los"])
+    N, T = tb.shape[0], tb.shape[1]
+
+    # Acceptance: tb plane bytes per dispatch are halved — the backend
+    # result plane is ceil(B/2) wide, not B.
+    assert tb.shape == (N, T, packed_tb_width(band))
+    assert tb.nbytes * TB_LANES_PER_BYTE >= N * T * band
+    assert tb.nbytes < N * T * band  # strictly smaller than one-per-byte
+
+    if mode == "semiglobal":
+        starts = np.stack([np.asarray(out["best_i"]),
+                           np.asarray(out["best_j"])], axis=1)
+    else:
+        starts = None
+    got = traceback_banded_batch(tb, los, n, m, band, starts=starts)
+    unpacked = unpack_tb_lanes(tb, band)
+    for p in range(N):
+        si, sj = (starts[p] if starts is not None
+                  else (int(n[p]), int(m[p])))
+        golden = _golden_traceback_unpacked(unpacked[p], los[p],
+                                            int(si), int(sj), band)
+        assert got[p] == golden, p
+        # The per-pair packed decoder agrees too.
+        assert traceback_banded(tb[p], los[p], int(si), int(sj),
+                                band) == golden, p
+
+
+@pytest.mark.parametrize("band", [17, 25])
+def test_odd_band_last_byte_single_nibble(band):
+    """Odd B end-to-end: the produced plane's last byte never carries a
+    high nibble (lane B would be out of band), and CIGARs re-score."""
+    q, r, n, m = simulate_read_pairs(4, 60, "illumina", seed=9)
+    bk = get_backend("reference")
+    out = bk.run(jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
+                 jnp.asarray(m), sc=MINIMAP2, band=band, collect_tb=True)
+    tb = np.asarray(out["tb"])
+    assert tb.shape[-1] == (band + 1) // 2
+    assert np.all(tb[..., -1] >> 4 == 0)
+    cigs = traceback_banded_batch(tb, np.asarray(out["los"]), n, m, band)
+    for p in range(len(n)):
+        assert (cigar_score(cigs[p], q[p][: n[p]], r[p][: m[p]], MINIMAP2)
+                == int(out["score"][p])), p
+
+
+def test_engine_align_decodes_packed_plane():
+    """The full engine path (bucket scheduler -> packed fetch -> batched
+    nibble decode) still yields re-scoring CIGARs."""
+    rng = np.random.default_rng(31)
+    reads, refs = [], []
+    for L in (40, 90, 150, 60):
+        a = rng.integers(0, 4, L).astype(np.int8)
+        b = a.copy()
+        b[rng.integers(0, L, max(L // 20, 1))] = (
+            b[rng.integers(0, L, max(L // 20, 1))] + 1) % 4
+        reads.append(a)
+        refs.append(b)
+    eng = AlignmentEngine(backend="reference", capacity=4)
+    out = eng.align(reads, refs, collect_tb=True)
+    for i, (a, b) in enumerate(zip(reads, refs)):
+        assert cigar_score(out["cigars"][i], a, b, MINIMAP2) \
+            == out["score"][i], i

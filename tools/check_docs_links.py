@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in markdown docs.
+
+Usage: python tools/check_docs_links.py README.md DESIGN.md [...]
+
+Checks every inline markdown link ``[text](target)`` whose target is a
+relative path (http(s)/mailto/pure-anchor targets are skipped): the
+target, resolved against the containing file's directory with any
+``#fragment`` stripped, must exist in the repo. Run by the CI docs job.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# Inline links only; reference-style defs are rare in this repo.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def broken_links(md_path: Path) -> list[tuple[str, str]]:
+    bad = []
+    text = md_path.read_text(encoding="utf-8")
+    for target in LINK_RE.findall(text):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md_path.parent / path).exists():
+            bad.append((str(md_path), target))
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_docs_links.py FILE.md [FILE.md ...]",
+              file=sys.stderr)
+        return 2
+    bad = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            print(f"missing doc file: {name}", file=sys.stderr)
+            return 2
+        bad += broken_links(p)
+    for doc, target in bad:
+        print(f"BROKEN LINK {doc}: ({target})", file=sys.stderr)
+    if bad:
+        return 1
+    print(f"link check OK: {len(argv)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
