@@ -17,14 +17,21 @@ sweep is infeasible in interpret mode on CPU):
   engine/mixed_untrimmed    full padded q_len + r_len sweep
   engine/tb_fetch_decode    packed traceback plane: bytes fetched per
                             pair per dispatch (2 flags/byte, DESIGN.md
-                            §5) + batched nibble-decode wall time
+                            §5) + batched nibble-decode wall time —
+                            the decode="host" fallback path
+  engine/tb_device_decode   on-device lockstep walk of the same planes
+                            (core.traceback_device): RLE bytes actually
+                            fetched per pair (trimmed to the longest
+                            CIGAR) + decode/fetch/join wall time
   engine/ragged_tb_pipeline multi-class ragged request with CIGAR decode
                             through the async enqueue/finalize pipeline
 
-The trimmed row's `derived` records speedup_vs_untrimmed and the
-tb_fetch_decode row's records tb_bytes_per_pair / pack_ratio — the perf
-trajectory numbers captured in BENCH_engine.json (acceptance: trimming
->= 2x; pack_ratio ~= 2, the halved TBM/host traffic).
+The trimmed row's `derived` records speedup_vs_untrimmed, the
+tb_fetch_decode row's records tb_bytes_per_pair / pack_ratio, and the
+tb_device_decode row's records rle_bytes_per_pair /
+fetch_cut_vs_packed_plane — the perf trajectory numbers captured in
+BENCH_engine.json (acceptance: trimming >= 2x; pack_ratio ~= 2; RLE
+fetch <= 1/10 of the packed-plane fetch).
 """
 
 from __future__ import annotations
@@ -38,6 +45,8 @@ from benchmarks.common import emit, time_host_fn, time_host_paired
 from repro.core import MINIMAP2, AlignmentEngine
 from repro.core.banded import traceback_banded_batch
 from repro.core.batch import AlignmentBatch, plan_buckets
+from repro.core.traceback_device import (decode_packed_tb, fetch_rle,
+                                         rle_to_cigars)
 
 #: Long/short true lengths. The long side sits just above the 512 bucket
 #: edge, so the group's padded geometry is 1024/1024 (T_full = 2048)
@@ -139,6 +148,32 @@ def run(backends=("reference", "pallas"), smoke=False):
              f"unpacked_bytes_per_pair={unpacked_bytes // tb.shape[0]};"
              f"pack_ratio={unpacked_bytes / tb.nbytes:.2f};"
              f"band={spec.band};t_max={spec.t_max}", backend=backend)
+
+        # On-device decode of the very same planes: the host fetches only
+        # the RLE CIGAR arrays trimmed to the longest path present —
+        # O(path segments) bytes per pair instead of the packed plane.
+        tb_dev, los_dev = out["tb"], out["los"]
+        n_dev = jnp.asarray(batch.n, jnp.int32)
+        m_dev = jnp.asarray(batch.m, jnp.int32)
+
+        def dev_decode():
+            ops, runs, lens = decode_packed_tb(tb_dev, los_dev, n_dev,
+                                               m_dev, band=spec.band)
+            fetched = fetch_rle({"cig_ops": ops, "cig_runs": runs,
+                                 "cig_len": lens})
+            return fetched, rle_to_cigars(*fetched)
+
+        us_dd = time_host_fn(dev_decode, iters=iters)
+        (ops_np, runs_np, lens_np), _ = dev_decode()
+        rle_bytes = ops_np.nbytes + runs_np.nbytes + lens_np.nbytes
+        tb_per_pair = tb.nbytes // tb.shape[0]
+        rle_per_pair = max(rle_bytes // tb.shape[0], 1)
+        emit("engine/tb_device_decode", us_dd / n_pairs,
+             f"rle_bytes_per_pair={rle_per_pair};"
+             f"tb_bytes_per_pair={tb_per_pair};"
+             f"fetch_cut_vs_packed_plane={tb_per_pair / rle_per_pair:.1f};"
+             f"k_used={ops_np.shape[1]};band={spec.band};"
+             f"t_max={spec.t_max}", backend=backend)
 
         # Multi-class ragged request through the async enqueue/finalize
         # pipeline, CIGAR decode included (the serving-shaped number).

@@ -9,10 +9,14 @@ from repro.core.full_dp import (FullDPResult, cigar_score, full_dp_align,
 from repro.core.diff_dp import DiffDPResult, diff_dp, range_report, serial_eq2
 from repro.core.banded import (banded_align, banded_align_batch,
                                pack_tb_lanes, packed_tb_width,
-                               traceback_banded, traceback_banded_batch,
-                               unpack_tb_lanes)
-from repro.core.batch import (AlignmentBatch, BucketSpec, DispatchGroup,
-                              align_batch, make_bucket, plan_buckets)
+                               select_tb_nibble, traceback_banded,
+                               traceback_banded_batch, unpack_tb_lanes)
+from repro.core.traceback_device import (decode_packed_tb,
+                                         device_decode_result, fetch_rle,
+                                         rle_to_cigars)
+from repro.core.batch import (DEFAULT_BAND_CAP, AlignmentBatch, BucketSpec,
+                              DispatchGroup, align_batch, make_bucket,
+                              plan_buckets, trimmed_sweep)
 from repro.core.edit_distance import (edit_distance, edit_distance_batch,
                                       levenshtein_reference)
 from repro.core.backends import (available_backends, get_backend,

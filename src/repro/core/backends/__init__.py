@@ -6,12 +6,20 @@ executes one padded, single-length-class group. Every backend honours one
 contract (see DESIGN.md §3):
 
     run(q_pad, r_pad, n, m, *, sc, band, adaptive, collect_tb, mode,
-        t_max)
+        t_max, decode)
       -> dict with (N,) int32 'score', 'final_lo', 'best_score',
-         'best_i', 'best_j'; plus 'tb' ((N, T, ceil(B/2)) uint8) and
-         'los' ((N, T+1) int32) when collect_tb, where T is the static
-         trimmed sweep length t_max (>= max true n + m over the batch)
-         or the full padded Lq + Lr when t_max is None.
+         'best_i', 'best_j'; plus, when collect_tb:
+           decode="host"   -> 'tb' ((N, T, ceil(B/2)) uint8) and 'los'
+                              ((N, T+1) int32) — the raw packed planes,
+                              for the host decoder / oracle paths;
+           decode="device" -> 'cig_ops' ((N, T) uint8), 'cig_runs'
+                              ((N, T) int32), 'cig_len' ((N,) int32) —
+                              the fixed-width RLE CIGARs of
+                              `core.traceback_device`, decoded on-device;
+                              tb/los are consumed before they could ever
+                              be fetched.
+         T is the static trimmed sweep length t_max (>= max true n + m
+         over the batch) or the full padded Lq + Lr when t_max is None.
 
 The traceback plane is *packed*: two 4-bit flags per byte, even band
 lane in the low nibble, odd lane in the high nibble; for odd B the last
@@ -19,8 +27,12 @@ byte holds a single valid nibble (`core.banded.pack_tb_lanes` is the
 canonical layout, DESIGN.md §5). Backends must produce the packed plane
 directly — packing happens inside the compute (scan step / kernel
 register file), never as a post-pass, so tb bytes moved per dispatch are
-ceil(B/2) x T x N on every path. `traceback_banded_batch` decodes the
-packed plane in place.
+ceil(B/2) x T x N on every path. The decode stage is fused straight onto
+the compute output (`traceback_device.device_decode_result` composes onto
+the reference scan output and onto the Pallas kernel's TBM block), with
+semiglobal start-cell selection on-device off the tracked best cell;
+`traceback_banded_batch` decodes the decode="host" plane in place and
+stays the oracle and CPU fallback.
 
 `run` must be jax-traceable (it is called under jit / shard_map by
 `core.distributed`). Results are bit-identical across backends — integer

@@ -26,13 +26,20 @@ class PallasBackend:
     interpret: bool | None = None
 
     def run(self, q_pad, r_pad, n, m, *, sc, band, adaptive=True,
-            collect_tb=True, mode="global", t_max=None):
+            collect_tb=True, mode="global", t_max=None, decode="host"):
         interpret = (self.interpret if self.interpret is not None
                      else _default_interpret())
-        return banded_align_kernel_batch(
+        out = banded_align_kernel_batch(
             q_pad, r_pad, n, m, sc=sc, band=band, adaptive=adaptive,
             collect_tb=collect_tb, mode=mode, batch_tile=self.batch_tile,
             chunk=self.chunk, interpret=interpret, t_max=t_max)
+        if collect_tb and decode == "device":
+            # Apply the lockstep walker to the kernel's TBM block: the
+            # packed plane stays in device memory and only the RLE CIGAR
+            # arrays become host-fetch candidates.
+            from repro.core.traceback_device import device_decode_result
+            out = device_decode_result(out, n, m, band=band, mode=mode)
+        return out
 
 
 BACKEND = PallasBackend

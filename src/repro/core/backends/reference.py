@@ -16,11 +16,17 @@ class ReferenceBackend:
     name = "reference"
 
     def run(self, q_pad, r_pad, n, m, *, sc, band, adaptive=True,
-            collect_tb=True, mode="global", t_max=None):
-        return banded.banded_align_batch(q_pad, r_pad, n, m, sc=sc,
-                                         band=band, adaptive=adaptive,
-                                         collect_tb=collect_tb, mode=mode,
-                                         t_max=t_max)
+            collect_tb=True, mode="global", t_max=None, decode="host"):
+        out = banded.banded_align_batch(q_pad, r_pad, n, m, sc=sc,
+                                        band=band, adaptive=adaptive,
+                                        collect_tb=collect_tb, mode=mode,
+                                        t_max=t_max)
+        if collect_tb and decode == "device":
+            # Fuse the lockstep walker onto the scan output: tb/los are
+            # consumed while still device values and never reach the host.
+            from repro.core.traceback_device import device_decode_result
+            out = device_decode_result(out, n, m, band=band, mode=mode)
+        return out
 
 
 BACKEND = ReferenceBackend

@@ -84,6 +84,17 @@ def pack_tb_lanes(code):
     return (low | (high << 4)).astype(jnp.uint8)
 
 
+def select_tb_nibble(byte, lane):
+    """4-bit flag of band lane ``lane`` from its packed plane byte
+    (`pack_tb_lanes` layout: even lane = low nibble, odd lane = high).
+
+    Written operator-wise so it serves both decoders: the host walkers
+    pass numpy arrays, the device walker (`core.traceback_device`)
+    passes traced jnp values.
+    """
+    return (byte >> ((lane & 1) * 4)) & 0xF
+
+
 def unpack_tb_lanes(packed, band: int) -> np.ndarray:
     """Inverse of `pack_tb_lanes` (numpy, host-side).
 
@@ -377,7 +388,7 @@ def traceback_banded(tb: np.ndarray, los: np.ndarray, n: int, m: int,
         k = i - int(los[t])
         if t < 1 or k < 0 or k >= band:
             return None  # path escaped the band: heuristic loss
-        return (int(tb[t - 1, k >> 1]) >> ((k & 1) * 4)) & 0xF
+        return int(select_tb_nibble(int(tb[t - 1, k >> 1]), k))
 
     ops: list[str] = []
     i, j = n, m
@@ -493,8 +504,7 @@ def traceback_banded_batch(tb: np.ndarray, los: np.ndarray, n, m,
         ok = (t >= 1) & (k >= 0) & (k < band)
         kc = np.clip(k, 0, band - 1)
         byte = tb[idx, np.clip(t - 1, 0, T - 1), kc >> 1]
-        c = (byte >> ((kc & 1) * 4).astype(np.uint8)) & 0xF
-        return c, ok
+        return select_tb_nibble(byte, kc), ok
 
     while True:
         active = (i > 0) | (j > 0)

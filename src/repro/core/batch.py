@@ -45,14 +45,17 @@ DEFAULT_BUCKET_EDGES = (128, 256, 512, 1024, 2048, 4096, 8192, 16384)
 TRIM_QUANTUM = 64
 
 
-def _trimmed_sweep(q_lens, r_lens, q_len: int, r_len: int) -> int:
-    """The group's trimmed sweep length: the max true n + m over its
+def trimmed_sweep(q_lens, r_lens, q_len: int, r_len: int) -> int:
+    """A group's trimmed sweep length: the max true n + m over its
     members (§VI-F — the wavefront needs exactly n + m trips), rounded up
     to TRIM_QUANTUM and capped at the full padded geometry."""
     t_true = int((np.asarray(q_lens, np.int64)
                   + np.asarray(r_lens, np.int64)).max())
     t_max = int(-(-t_true // TRIM_QUANTUM) * TRIM_QUANTUM)
     return min(t_max, q_len + r_len)
+
+
+_trimmed_sweep = trimmed_sweep  # backward-compat alias
 
 
 def _round_up(x: int, edges=DEFAULT_BUCKET_EDGES) -> int:
@@ -71,8 +74,15 @@ def default_base_bandwidth(L: int, base_bandwidth: int | None = None) -> int:
     return 10 if L <= 1024 else 30
 
 
+#: Band-width cap of B = min(w + 0.01 L, cap) (paper §IV-B1; 100 follows
+#: BWA-MEM's evidence that B=100 suffices for typical read lengths).
+#: Scheduler/engine callers can raise it for long-read scenarios.
+DEFAULT_BAND_CAP = 100
+
+
 def make_bucket(q_lens, r_lens, *, base_bandwidth: int | None = None,
-                capacity: int = 64) -> BucketSpec:
+                capacity: int = 64,
+                band_cap: int = DEFAULT_BAND_CAP) -> BucketSpec:
     """Bucket spec for a set of reads forced into ONE length class.
 
     Prefer `plan_buckets` — it keeps length classes separate so short
@@ -83,8 +93,9 @@ def make_bucket(q_lens, r_lens, *, base_bandwidth: int | None = None,
     L = max(q_len, r_len)
     w = default_base_bandwidth(L, base_bandwidth)
     return BucketSpec(q_len=q_len, r_len=r_len,
-                      band=adaptive_bandwidth(L, w), capacity=capacity,
-                      t_max=_trimmed_sweep(q_lens, r_lens, q_len, r_len))
+                      band=adaptive_bandwidth(L, w, cap=band_cap),
+                      capacity=capacity,
+                      t_max=trimmed_sweep(q_lens, r_lens, q_len, r_len))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,11 +107,11 @@ class DispatchGroup:
 
 
 def plan_buckets(q_lens, r_lens, *, base_bandwidth: int | None = None,
-                 capacity: int = 64,
-                 edges=DEFAULT_BUCKET_EDGES) -> list[DispatchGroup]:
+                 capacity: int = 64, edges=DEFAULT_BUCKET_EDGES,
+                 band_cap: int = DEFAULT_BAND_CAP) -> list[DispatchGroup]:
     """Multi-bucket scheduler: partition reads into per-length-class
     dispatch groups, each with its own padded geometry and band width
-    B = min(w + 0.01 L, 100)."""
+    B = min(w + 0.01 L, band_cap)."""
     q_lens = np.asarray(q_lens, np.int64)
     r_lens = np.asarray(r_lens, np.int64)
     cls = np.array([_round_up(int(max(q, r)), edges)
@@ -112,10 +123,10 @@ def plan_buckets(q_lens, r_lens, *, base_bandwidth: int | None = None,
         r_len = _round_up(int(r_lens[idx].max()), edges)
         w = default_base_bandwidth(int(c), base_bandwidth)
         spec = BucketSpec(q_len=q_len, r_len=r_len,
-                          band=adaptive_bandwidth(int(c), w),
+                          band=adaptive_bandwidth(int(c), w, cap=band_cap),
                           capacity=capacity,
-                          t_max=_trimmed_sweep(q_lens[idx], r_lens[idx],
-                                               q_len, r_len))
+                          t_max=trimmed_sweep(q_lens[idx], r_lens[idx],
+                                              q_len, r_len))
         groups.append(DispatchGroup(spec=spec, indices=idx))
     return groups
 
@@ -165,11 +176,12 @@ class AlignmentBatch:
     num_real: int       # true request size N, before dummy-pair padding
 
     @classmethod
-    def from_lists(cls, reads, refs, *, base_bandwidth=None, capacity=64):
+    def from_lists(cls, reads, refs, *, base_bandwidth=None, capacity=64,
+                   band_cap=DEFAULT_BAND_CAP):
         n = np.asarray([len(x) for x in reads], np.int32)
         m = np.asarray([len(x) for x in refs], np.int32)
         spec = make_bucket(n, m, base_bandwidth=base_bandwidth,
-                           capacity=capacity)
+                           capacity=capacity, band_cap=band_cap)
         q_pad, r_pad, n, m = pad_group(reads, refs, spec)
         return cls(q_pad=q_pad, r_pad=r_pad, n=n, m=m, spec=spec,
                    num_real=len(reads))
@@ -197,15 +209,44 @@ def enqueue_dispatch(run, q_pad, r_pad, n, m, *, capacity: int):
 
 
 def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
-                      collect_tb: bool = False, mode: str = "global"):
+                      collect_tb: bool = False, mode: str = "global",
+                      decode: str = "device"):
     """Materialise an enqueued group: merge slices to numpy (this blocks
     only on *this* group's device work), strip dummy padding down to
-    `num_real`, and — when collect_tb — decode every CIGAR at once with
-    the vectorised `traceback_banded_batch` (semiglobal paths start from
-    the tracked best cell). The tb buffer fetched here is the *packed*
-    (k, T, ceil(B/2)) plane — half the host-fetch bytes of a
-    one-flag-per-byte layout — and the decoder reads nibbles from it
-    directly."""
+    `num_real`, and — when collect_tb — produce the group's CIGARs.
+
+    decode="device" (the production path): the backend already walked
+    the traceback on-device, so the host fetch per slice is the RLE
+    arrays trimmed to the longest CIGAR present (`cig_len` first, then
+    the device-sliced op/run planes — O(path segments) bytes per pair,
+    never the packed plane), and host work is a trivial RLE join.
+
+    decode="host" (oracle / CPU fallback): fetch the packed
+    (k, T, ceil(B/2)) flag plane and decode every CIGAR at once with the
+    vectorised `traceback_banded_batch` (semiglobal paths start from the
+    tracked best cell)."""
+    if collect_tb and decode == "device":
+        from repro.core.traceback_device import rle_to_cigars
+
+        # Trim the fetch across slices: cig_len is a tiny (k,) fetch and
+        # bounds the device-side column slice of the op/run planes.
+        lens = [np.asarray(o["cig_len"]) for o in outs]
+        k_used = max(1, *(int(l.max(initial=0)) for l in lens))
+        merged = {}
+        for key in outs[0]:
+            if key in ("cig_ops", "cig_runs"):
+                merged[key] = np.concatenate(
+                    [np.asarray(o[key][:, :k_used]) for o in outs]
+                )[:num_real]
+            elif key == "cig_len":
+                merged[key] = np.concatenate(lens)[:num_real]
+            else:
+                merged[key] = np.concatenate(
+                    [np.asarray(o[key]) for o in outs])[:num_real]
+        merged["cigars"] = rle_to_cigars(merged["cig_ops"],
+                                         merged["cig_runs"],
+                                         merged["cig_len"])
+        return merged
     merged = {}
     for key in outs[0]:
         merged[key] = np.concatenate(
@@ -224,22 +265,24 @@ def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
 def run_dispatch(bk, q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
                  capacity: int, num_real: int, adaptive: bool = True,
                  collect_tb: bool = False, mode: str = "global",
-                 t_max: int | None = None):
+                 t_max: int | None = None, decode: str = "device"):
     """Run one padded single-length-class group through a backend:
     `enqueue_dispatch` + `finalize_dispatch` back to back (the shared
     dispatch core of `align_batch`; the engine's multi-bucket path calls
     the two phases separately to overlap groups)."""
     run = functools.partial(bk.run, sc=sc, band=band, adaptive=adaptive,
-                            collect_tb=collect_tb, mode=mode, t_max=t_max)
+                            collect_tb=collect_tb, mode=mode, t_max=t_max,
+                            decode=decode)
     outs = enqueue_dispatch(run, q_pad, r_pad, n, m, capacity=capacity)
     return finalize_dispatch(outs, n, m, band=band, num_real=num_real,
-                             collect_tb=collect_tb, mode=mode)
+                             collect_tb=collect_tb, mode=mode,
+                             decode=decode)
 
 
 def align_batch(batch: AlignmentBatch, sc: ScoringConfig = MINIMAP2, *,
                 adaptive: bool = True, collect_tb: bool = False,
                 mode: str = "global", backend: str = "reference",
-                backend_opts: dict | None = None):
+                backend_opts: dict | None = None, decode: str = "device"):
     """Run the banded aligner over every dispatch group of a batch.
 
     mode="semiglobal" gives free gaps at the reference-window ends — the
@@ -248,9 +291,11 @@ def align_batch(batch: AlignmentBatch, sc: ScoringConfig = MINIMAP2, *,
     backend selects the execution path ('reference', 'pallas', 'auto');
     results are bit-identical across backends. Dummy padding pairs are
     stripped: every returned array covers exactly `batch.num_real` reads.
-    When collect_tb, the result also carries 'cigars' — decoded for the
-    whole batch by the vectorised `traceback_banded_batch` (no per-pair
-    Python loop on this path).
+    When collect_tb, the result also carries 'cigars' — walked on-device
+    by the lockstep decoder and fetched as RLE arrays (decode="device",
+    the default), or fetched as packed planes and decoded by the
+    vectorised host `traceback_banded_batch` (decode="host"); both yield
+    bit-identical CIGARs and neither runs a per-pair Python decode loop.
     """
     bk = get_backend(backend, **(backend_opts or {}))
     return run_dispatch(bk, batch.q_pad, batch.r_pad, batch.n, batch.m,
@@ -258,4 +303,4 @@ def align_batch(batch: AlignmentBatch, sc: ScoringConfig = MINIMAP2, *,
                         capacity=batch.spec.capacity,
                         num_real=batch.num_real, adaptive=adaptive,
                         collect_tb=collect_tb, mode=mode,
-                        t_max=batch.spec.t_max)
+                        t_max=batch.spec.t_max, decode=decode)

@@ -40,7 +40,7 @@ def make_aligner(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *, band: int,
                  batch_axes: tuple[str, ...] | None = None,
                  backend: str = "reference",
                  backend_opts: dict | None = None,
-                 t_max: int | None = None):
+                 t_max: int | None = None, decode: str = "host"):
     """Builds a pjit-able batched aligner sharded over the mesh.
 
     A thin wrapper over `AlignmentEngine(mesh=...)`: the returned
@@ -59,6 +59,10 @@ def make_aligner(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *, band: int,
         same shard_map wrapper serves every path.
       t_max: optional trimmed sweep length (>= max true n + m of every
         batch the aligner will see).
+      decode: traceback decode stage when collect_tb — "host" returns the
+        raw packed planes, "device" fuses the lockstep walker under the
+        same shard_map and returns RLE CIGAR arrays (still zero
+        collectives: the walk is per-pair).
     """
     from repro.core.engine import AlignmentEngine
 
@@ -66,7 +70,7 @@ def make_aligner(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *, band: int,
                           backend_opts=backend_opts, mesh=mesh,
                           batch_axes=batch_axes)
     return eng.sharded_runner(band=band, collect_tb=collect_tb,
-                              t_max=t_max)
+                              t_max=t_max, decode=decode)
 
 
 def alignment_serve_step(mesh: Mesh, sc: ScoringConfig = MINIMAP2, *,

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.backends import get_backend
 from repro.core.banded import banded_align, traceback_banded
 from repro.core.scoring import EDIT_DISTANCE, adaptive_bandwidth
 
@@ -21,25 +20,42 @@ from repro.core.scoring import EDIT_DISTANCE, adaptive_bandwidth
 def edit_distance_batch(q_pad, r_pad, n, m, *, band: int | None = None,
                         with_traceback: bool = False,
                         backend: str = "reference",
-                        backend_opts: dict | None = None):
+                        backend_opts: dict | None = None,
+                        decode: str = "host"):
     """Banded edit distance for a padded batch.
 
-    Runs the degenerate scoring through the selected execution backend
-    ('reference', 'pallas', 'auto') — the paper's reconfigurable data
-    flow: same engine, different scoring constants. Returns dict with
-    'distance' ((B,) int32) and optionally the traceback planes ('tb' is
-    the packed (N, T, ceil(band/2)) layout of the backend contract).
+    Runs the degenerate scoring through the full engine dispatch path
+    (`AlignmentEngine.align_arrays`): the sweep is trimmed to the true
+    max n + m of the batch (`t_max`, §VI-F) and the traceback plane is
+    the packed 2-flags-per-byte layout of the backend contract — the
+    paper's reconfigurable data flow: same engine, different scoring
+    constants. Returns dict with 'distance' ((N,) int32), 'band', and
+    the trimmed 't_max'; with_traceback adds either the raw planes
+    ('tb'/'los', decode="host") or on-device-decoded 'cigars'
+    (decode="device" — the packed plane never reaches the host).
     distance = -score under the EDIT_DISTANCE scoring.
     """
+    from repro.core.batch import trimmed_sweep
+    from repro.core.engine import AlignmentEngine
+
     if band is None:
         band = adaptive_bandwidth(int(q_pad.shape[1]), base_bandwidth=10)
-    bk = get_backend(backend, **(backend_opts or {}))
-    out = bk.run(q_pad, r_pad, n, m, sc=EDIT_DISTANCE, band=band,
-                 adaptive=True, collect_tb=with_traceback)
-    result = {"distance": -np.asarray(out["score"]), "band": band}
+    t_max = trimmed_sweep(np.asarray(n), np.asarray(m),
+                          int(q_pad.shape[1]), int(r_pad.shape[1]))
+    eng = AlignmentEngine(backend=backend, sc=EDIT_DISTANCE,
+                          backend_opts=backend_opts)
+    out = eng.align_arrays(q_pad, r_pad, n, m, band=band,
+                           collect_tb=with_traceback, t_max=t_max,
+                           decode=decode)
+    result = {"distance": -np.asarray(out["score"]), "band": band,
+              "t_max": t_max}
     if with_traceback:
-        result["tb"] = out["tb"]
-        result["los"] = out["los"]
+        if decode == "device":
+            from repro.core.traceback_device import fetch_rle, rle_to_cigars
+            result["cigars"] = rle_to_cigars(*fetch_rle(out))
+        else:
+            result["tb"] = out["tb"]
+            result["los"] = out["los"]
     return result
 
 

@@ -23,11 +23,14 @@ engine
      inter-tile communication, so the lowered program has zero
      collectives) — one capacity block per shard per slice,
   4. scatters results back into the caller's original read order, and
-  5. when tracebacks are requested, decodes every group's packed
-     (T, ceil(B/2)) flag planes at once with the vectorised
-     `traceback_banded_batch` — the host fetch per dispatch is the
-     packed plane (two 4-bit flags per byte, DESIGN.md §5); no unpacked
-     intermediate is ever materialised.
+  5. when tracebacks are requested, walks every group's packed
+     (T, ceil(B/2)) flag plane **on-device** with the jit'd lockstep
+     decoder (`core.traceback_device`, fused onto the dispatch program)
+     and fetches only fixed-width RLE CIGAR arrays trimmed to the
+     longest path present — O(path segments) host bytes per pair instead
+     of the ceil(B/2) x t_max plane (DESIGN.md §5). decode="host" keeps
+     the vectorised numpy `traceback_banded_batch` path as the oracle
+     and CPU fallback.
 
 All backends return bit-identical results (integer DP) — the engine is a
 pure scheduling layer. Layering and the backend contract are documented
@@ -43,9 +46,10 @@ import numpy as np
 
 from repro.core.backends import available_backends, get_backend, \
     resolve_backend
-from repro.core.batch import (DEFAULT_BUCKET_EDGES, default_base_bandwidth,
-                              enqueue_dispatch, finalize_dispatch,
-                              pad_group, plan_buckets, run_dispatch)
+from repro.core.batch import (DEFAULT_BAND_CAP, DEFAULT_BUCKET_EDGES,
+                              default_base_bandwidth, enqueue_dispatch,
+                              finalize_dispatch, pad_group, plan_buckets,
+                              run_dispatch)
 from repro.core.scoring import ScoringConfig, MINIMAP2, adaptive_bandwidth
 
 #: Result keys every backend returns for each pair (original read order).
@@ -82,8 +86,11 @@ class AlignmentEngine:
         or an already-constructed backend object.
       sc: affine-gap scoring config shared by every dispatch.
       adaptive: adaptive wavefront direction (Table V ablation switch).
-      base_bandwidth: w in B = min(w + 0.01 L, 100); None = per-class
-        default (10 short / 30 long, §VI-B).
+      base_bandwidth: w in B = min(w + 0.01 L, band_cap); None =
+        per-class default (10 short / 30 long, §VI-B).
+      band_cap: cap of the adaptive band width (paper §IV-B1; default
+        100 per BWA-MEM's evidence). Raise it for long-read scenarios
+        that need a wider band than the short-read default.
       capacity: pairs per dispatch group slice (sequence-level k). With a
         mesh this is the *per-shard* capacity: each dispatch slice spans
         capacity x num_shards pairs.
@@ -93,6 +100,12 @@ class AlignmentEngine:
         of its members) instead of the full padded q_len + r_len.
         Results are bit-identical either way; False exists for the
         trimming-parity tests and benchmarks.
+      decode: traceback decode stage for the ragged `align` path.
+        "device" (default) fuses the lockstep walker after the compute —
+        the packed tb plane never leaves the device and the host fetches
+        RLE CIGAR arrays; "host" fetches the packed plane and decodes
+        with the numpy `traceback_banded_batch` (oracle / CPU fallback).
+        CIGARs are bit-identical either way.
       mesh: optional jax.sharding.Mesh — shard every dispatch slice's
         batch dimension over `batch_axes` with shard_map (tile-level
         parallelism, Fig. 6(a)).
@@ -104,10 +117,12 @@ class AlignmentEngine:
     sc: ScoringConfig = MINIMAP2
     adaptive: bool = True
     base_bandwidth: int | None = None
+    band_cap: int = DEFAULT_BAND_CAP
     capacity: int = 64
     backend_opts: dict | None = None
     bucket_edges: tuple = DEFAULT_BUCKET_EDGES
     trim: bool = True
+    decode: str = "device"
     mesh: object = None
     batch_axes: tuple | None = None
 
@@ -135,17 +150,21 @@ class AlignmentEngine:
     # Mesh path: one jit'd shard_map program per dispatch signature.
     # ------------------------------------------------------------------
     def sharded_runner(self, *, band: int, collect_tb: bool = False,
-                       mode: str = "global", t_max: int | None = None):
+                       mode: str = "global", t_max: int | None = None,
+                       decode: str = "host"):
         """The jit'd shard_map'd backend program for one dispatch
         signature (cached per engine). The batch dimension of every
         argument shards over the mesh's `batch_axes`; because the
         backend contract is jax-traceable and alignment is
         embarrassingly parallel, the lowered program contains zero
-        collectives (asserted by tests/test_distributed.py)."""
+        collectives (asserted by tests/test_distributed.py) — including
+        with decode="device", where the lockstep traceback walker is
+        fused under the same shard_map (the walk is per-pair, so it
+        shards with the batch and needs no communication either)."""
         if self.mesh is None:
             raise ValueError("sharded_runner requires AlignmentEngine("
                              "mesh=...)")
-        key = (band, collect_tb, mode, t_max)
+        key = (band, collect_tb, mode, t_max, decode)
         fn = self._runners.get(key)
         if fn is None:
             import jax
@@ -158,7 +177,7 @@ class AlignmentEngine:
                 return self.backend.run(q, r, n, m, sc=self.sc, band=band,
                                         adaptive=self.adaptive,
                                         collect_tb=collect_tb, mode=mode,
-                                        t_max=t_max)
+                                        t_max=t_max, decode=decode)
 
             fn = jax.jit(shard_map(local_align, mesh=self.mesh,
                                    in_specs=(spec, spec, spec, spec),
@@ -171,28 +190,31 @@ class AlignmentEngine:
     # ------------------------------------------------------------------
     def align_arrays(self, q_pad, r_pad, n, m, *, band: int | None = None,
                     mode: str = "global", collect_tb: bool = False,
-                    t_max: int | None = None):
+                    t_max: int | None = None, decode: str = "host"):
         """Align an already-padded single-class batch on the backend.
 
         The thin path used by `edit_distance_batch`, `core.distributed`
         and the benchmarks; returns the raw backend result dict. With
         `mesh=`, the batch shards over the mesh (its leading dimension
         must divide by `num_shards`). `t_max` optionally trims the sweep
-        (caller guarantees t_max >= max true n + m).
+        (caller guarantees t_max >= max true n + m). `decode` defaults to
+        "host" here — the raw-plane contract (tb/los device arrays) that
+        the oracle tests and plane-level tooling consume; pass "device"
+        to get the fused on-device walk's RLE arrays instead.
         """
         if band is None:
             L = max(int(q_pad.shape[1]), int(r_pad.shape[1]))
             band = adaptive_bandwidth(L, default_base_bandwidth(
-                L, self.base_bandwidth))
+                L, self.base_bandwidth), cap=self.band_cap)
         _check_t_max(t_max, n, m)
         if self.mesh is not None:
             fn = self.sharded_runner(band=band, collect_tb=collect_tb,
-                                     mode=mode, t_max=t_max)
+                                     mode=mode, t_max=t_max, decode=decode)
             return fn(q_pad, r_pad, n, m)
         return self.backend.run(q_pad, r_pad, n, m, sc=self.sc, band=band,
                                 adaptive=self.adaptive,
                                 collect_tb=collect_tb, mode=mode,
-                                t_max=t_max)
+                                t_max=t_max, decode=decode)
 
     # ------------------------------------------------------------------
     # Ragged multi-bucket path (lists in, original-order numpy out).
@@ -211,10 +233,12 @@ class AlignmentEngine:
 
         Returns a dict of (N,) arrays in the caller's original order:
         the SCALAR_KEYS plus 'band' (the per-read band width actually
-        used); with collect_tb also 'cigars' (list of N CIGARs, decoded
-        per group by the vectorised batched traceback straight from the
-        packed ceil(B/2)-byte flag plane; semiglobal CIGARs start from
-        the tracked best cell on the last read row).
+        used); with collect_tb also 'cigars' (list of N CIGARs — by
+        default walked on-device per group by the fused lockstep decoder
+        and fetched as trimmed RLE arrays, with semiglobal start-cell
+        selection on-device off the tracked best cell; decode="host"
+        falls back to fetching the packed plane and running the numpy
+        batched traceback. Identical CIGARs either way).
         """
         if len(reads) != len(refs):
             raise ValueError("reads and refs must pair up")
@@ -227,7 +251,8 @@ class AlignmentEngine:
                               [len(x) for x in refs],
                               base_bandwidth=self.base_bandwidth,
                               capacity=self.capacity,
-                              edges=self.bucket_edges)
+                              edges=self.bucket_edges,
+                              band_cap=self.band_cap)
         shards = self.num_shards
 
         def enqueue(g):
@@ -239,12 +264,12 @@ class AlignmentEngine:
             if self.mesh is not None:
                 run = self.sharded_runner(
                     band=g.spec.band, collect_tb=collect_tb, mode=mode,
-                    t_max=t_max)
+                    t_max=t_max, decode=self.decode)
             else:
                 run = functools.partial(
                     self.backend.run, sc=self.sc, band=g.spec.band,
                     adaptive=self.adaptive, collect_tb=collect_tb,
-                    mode=mode, t_max=t_max)
+                    mode=mode, t_max=t_max, decode=self.decode)
             outs = enqueue_dispatch(run, q_pad, r_pad, n, m,
                                     capacity=g.spec.capacity * shards)
             return g, n, m, outs
@@ -260,7 +285,8 @@ class AlignmentEngine:
             idx = g.indices
             merged = finalize_dispatch(outs, n, m, band=g.spec.band,
                                        num_real=len(idx),
-                                       collect_tb=collect_tb, mode=mode)
+                                       collect_tb=collect_tb, mode=mode,
+                                       decode=self.decode)
             for key in SCALAR_KEYS:
                 out[key][idx] = merged[key]
             out["band"][idx] = g.spec.band

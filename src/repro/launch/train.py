@@ -4,7 +4,7 @@ Wires together: config registry -> mesh -> sharded train state ->
 microbatched train step -> resilient loop (checkpoint/restore, NaN
 rollback, straggler monitor). On real TPU pods this binary runs per host
 under `jax.distributed.initialize()`; offline it drives the reduced
-configs end-to-end on CPU (see examples/train_lm.py for a scripted run).
+configs end-to-end on CPU.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
         --steps 100 --reduced --ckpt-dir /tmp/ckpt

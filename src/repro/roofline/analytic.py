@@ -66,6 +66,12 @@ def _weight_bytes(cfg, active_only: bool, dtype_bytes: int = 2) -> float:
     return p * dtype_bytes
 
 
+#: Divergence rate assumed for the RLE host-fetch estimate: one op-run
+#: boundary per ~20 bases (read error + true-variant events), i.e. each
+#: event ends an M run and opens/closes a gap or mismatch context.
+ALIGN_DIVERGENCE = 0.05
+
+
 def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
     """Roofline for the rapidx-align cells (the paper's own workload).
 
@@ -73,9 +79,13 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
     masks + traceback encode); a pair of length L runs 2L steps over B
     lanes (equal-length pairs: the trimmed sweep t_max equals the true
     n + m = 2L). Traceback streams the *packed* plane — two 4-bit flags
-    per byte, (2L x ceil(B/2)) uint8 per pair (DESIGN.md §5) — to HBM;
-    sequences stream in once. Collectives are zero by construction
-    (tile independence).
+    per byte, (2L x ceil(B/2)) uint8 per pair (DESIGN.md §5) — to HBM,
+    where the fused on-device walker reads it back and reduces it to RLE
+    CIGARs; sequences stream in once. The host-interface fetch is
+    therefore charged with the **RLE bytes** (5 bytes per CIGAR segment
+    + the per-pair length), not the packed plane — the plane never
+    crosses the memory interface (DESIGN.md §5). Collectives are zero by
+    construction (tile independence).
     """
     L = record["length"]
     B_band = record["band"]
@@ -89,7 +99,13 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
     flops_dev = pairs_dev * ops
     tb_bytes = 2 * L * ((B_band + 1) // 2)  # packed tb plane per pair
     seq_bytes = 2 * L * 4
-    bytes_dev = pairs_dev * (tb_bytes + seq_bytes)
+    # HBM traffic: TBM store by the compute + read-back by the fused
+    # decoder (the walk's gathers re-touch at most the plane once).
+    bytes_dev = pairs_dev * (2 * tb_bytes + seq_bytes)
+    # Host-interface fetch per pair: the trimmed RLE arrays. Segment
+    # count ~ 2 boundaries per divergence event + 1 (DESIGN.md §4b).
+    rle_segments = 2 * ALIGN_DIVERGENCE * 2 * L + 1
+    host_fetch_bytes = pairs_dev * (5 * rle_segments + 4)
     terms = roofline_terms(flops_dev, bytes_dev, 0.0, hw)
     return {
         "cell": f"rapidx-align/{record['shape']}/{record.get('mesh', '?')}",
@@ -97,6 +113,8 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
         "flops_per_device": flops_dev,
         "bytes_per_device": bytes_dev,
         "collective_bytes_per_device": 0.0,
+        "host_fetch_bytes_per_device": host_fetch_bytes,
+        "tb_plane_bytes_per_pair": tb_bytes,
         **terms,
         "pairs_per_s_per_chip_bound":
             1.0 / max(terms["step_time_overlap_s"] / pairs_dev, 1e-30),

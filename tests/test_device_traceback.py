@@ -1,0 +1,185 @@
+"""On-device lockstep traceback decode (core.traceback_device).
+
+Acceptance for the device decode stage: the RLE CIGARs walked on-device
+are bit-identical to the host `traceback_banded_batch` oracle across both
+backends x global/semiglobal x odd/even band widths x ragged mixed-length
+batches, the engine's ragged pipeline produces the same CIGARs whether it
+fetches RLE arrays (decode="device") or packed planes (decode="host"),
+and the trimmed RLE fetch is a small fraction of the plane fetch.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import MINIMAP2, AlignmentEngine, cigar_score
+from repro.core.backends import get_backend
+from repro.core.banded import packed_tb_width, traceback_banded_batch
+from repro.core.traceback_device import (decode_packed_tb, fetch_rle,
+                                         rle_to_cigars)
+from repro.data.genome import ReadSimulator, random_genome, \
+    simulate_read_pairs
+
+PALLAS_OPTS = {"batch_tile": 4, "chunk": 32}
+BACKENDS = [("reference", {}), ("pallas", PALLAS_OPTS)]
+
+
+def _mixed_reads(n_pairs, lengths, seed=0):
+    sim = ReadSimulator(random_genome(60_000, seed=seed), "illumina",
+                        seed=seed + 1)
+    reads, refs = [], []
+    for k in range(n_pairs):
+        ref, read = sim.sample(lengths[k % len(lengths)])
+        refs.append(ref)
+        reads.append(read)
+    return reads, refs
+
+
+# ---------------------------------------------------------------------------
+# RLE plumbing units.
+# ---------------------------------------------------------------------------
+
+def test_rle_to_cigars_join():
+    ops = np.array([[1, 3, 1, 0], [2, 0, 0, 0], [0, 0, 0, 0]], np.uint8)
+    runs = np.array([[4, 2, 1, 0], [7, 0, 0, 0], [0, 0, 0, 0]], np.int32)
+    lens = np.array([3, 1, 0], np.int32)
+    assert rle_to_cigars(ops, runs, lens) == [
+        [("M", 4), ("D", 2), ("M", 1)], [("I", 7)], []]
+
+
+def test_fetch_rle_trims_to_longest_cigar():
+    q, r, n, m = simulate_read_pairs(5, 60, "illumina", seed=3)
+    out = get_backend("reference").run(
+        jnp.asarray(q), jnp.asarray(r), jnp.asarray(n), jnp.asarray(m),
+        sc=MINIMAP2, band=16, collect_tb=True, decode="device")
+    ops, runs, lens = fetch_rle(out)
+    k_used = max(int(lens.max()), 1)
+    assert ops.shape == (5, k_used) and runs.shape == (5, k_used)
+    assert k_used < out["cig_ops"].shape[1]  # static K = T bound, trimmed
+    # Past-the-end slots of shorter CIGARs are empty.
+    for p in range(5):
+        assert (ops[p, lens[p]:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: device RLE decode == host oracle, everywhere.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,opts", BACKENDS,
+                         ids=[b for b, _ in BACKENDS])
+@pytest.mark.parametrize("mode", ["global", "semiglobal"])
+@pytest.mark.parametrize("band", [24, 25], ids=["evenB", "oddB"])
+def test_device_decode_matches_host_oracle(backend, opts, mode, band):
+    """Both backends x both modes x even/odd band over a ragged batch:
+    the on-device walk emits exactly the host decoder's CIGARs."""
+    q, r, n, m = simulate_read_pairs(6, 70, "ont_2d", seed=5)
+    bk = get_backend(backend, **opts)
+    args = (jnp.asarray(q), jnp.asarray(r), jnp.asarray(n), jnp.asarray(m))
+    host = bk.run(*args, sc=MINIMAP2, band=band, collect_tb=True,
+                  mode=mode, decode="host")
+    dev = bk.run(*args, sc=MINIMAP2, band=band, collect_tb=True,
+                 mode=mode, decode="device")
+    # The device result replaces the planes with RLE arrays.
+    assert "tb" not in dev and "los" not in dev
+    assert dev["cig_ops"].shape == host["tb"].shape[:2]
+
+    if mode == "semiglobal":
+        starts = np.stack([np.asarray(host["best_i"]),
+                           np.asarray(host["best_j"])], axis=1)
+    else:
+        starts = None
+    oracle = traceback_banded_batch(np.asarray(host["tb"]),
+                                    np.asarray(host["los"]), n, m, band,
+                                    starts=starts)
+    assert rle_to_cigars(*fetch_rle(dev)) == oracle
+
+
+def test_decode_packed_tb_semiglobal_starts_on_device():
+    """Start-cell selection off the tracked best cell happens on-device:
+    feeding best_i/best_j as device values reproduces the host walk from
+    the same cells."""
+    q, r, n, m = simulate_read_pairs(5, 80, "ont_2d", seed=13)
+    out = get_backend("reference").run(
+        jnp.asarray(q), jnp.asarray(r), jnp.asarray(n), jnp.asarray(m),
+        sc=MINIMAP2, band=24, collect_tb=True, mode="semiglobal")
+    ops, runs, lens = decode_packed_tb(out["tb"], out["los"],
+                                       out["best_i"], out["best_j"],
+                                       band=24)
+    starts = np.stack([np.asarray(out["best_i"]),
+                       np.asarray(out["best_j"])], axis=1)
+    oracle = traceback_banded_batch(np.asarray(out["tb"]),
+                                    np.asarray(out["los"]), n, m, 24,
+                                    starts=starts)
+    got = rle_to_cigars(*fetch_rle(
+        {"cig_ops": ops, "cig_runs": runs, "cig_len": lens}))
+    assert got == oracle
+
+
+@pytest.mark.parametrize("mode", ["global", "semiglobal"])
+def test_engine_device_decode_matches_host_decode(mode):
+    """The full ragged pipeline (bucket scheduler -> fused decode -> RLE
+    fetch -> join) yields the same CIGARs as the host-decode engine, over
+    a >= 2-length-class mix, and global CIGARs re-score exactly."""
+    reads, refs = _mixed_reads(9, (50, 90, 170), seed=7)
+    eng_dev = AlignmentEngine(backend="reference", capacity=4)
+    assert eng_dev.decode == "device"  # the production default
+    eng_host = AlignmentEngine(backend="reference", capacity=4,
+                               decode="host")
+    o_dev = eng_dev.align(reads, refs, mode=mode, collect_tb=True)
+    o_host = eng_host.align(reads, refs, mode=mode, collect_tb=True)
+    for k in ("score", "best_score", "band"):
+        np.testing.assert_array_equal(o_dev[k], o_host[k], err_msg=k)
+    assert o_dev["cigars"] == o_host["cigars"]
+    if mode == "global":
+        for i in range(len(reads)):
+            assert cigar_score(o_dev["cigars"][i], reads[i], refs[i],
+                               MINIMAP2) == o_dev["score"][i], i
+
+
+def test_engine_device_decode_backend_equivalence():
+    """reference and pallas agree bit-exactly through the device-decode
+    engine path (ragged mix, odd capacity)."""
+    reads, refs = _mixed_reads(7, (40, 90), seed=11)
+    o_ref = AlignmentEngine(backend="reference", capacity=4).align(
+        reads, refs, collect_tb=True)
+    o_pal = AlignmentEngine(backend="pallas", capacity=4,
+                            backend_opts=PALLAS_OPTS).align(
+        reads, refs, collect_tb=True)
+    np.testing.assert_array_equal(o_ref["score"], o_pal["score"])
+    assert o_ref["cigars"] == o_pal["cigars"]
+
+
+def test_rle_fetch_is_small_fraction_of_plane_fetch():
+    """The traffic claim: for a mixed half-length dispatch (the
+    BENCH_engine shape), the trimmed RLE fetch is <= 1/10 of the packed
+    plane's bytes per pair."""
+    rng = np.random.default_rng(61)
+    reads, refs = [], []
+    for k in range(8):
+        a, b = (260, 32) if k % 2 == 0 else (32, 260)
+        read = rng.integers(0, 4, a).astype(np.int8)
+        ref = rng.integers(0, 4, b).astype(np.int8)
+        src, dst = (read, ref) if a >= b else (ref, read)
+        dst[:] = src[: len(dst)]
+        reads.append(read)
+        refs.append(ref)
+    eng = AlignmentEngine(backend="reference", capacity=8)
+    from repro.core.batch import AlignmentBatch
+    batch = AlignmentBatch.from_lists(reads, refs, capacity=8)
+    spec = batch.spec
+    args = (jnp.asarray(batch.q_pad), jnp.asarray(batch.r_pad),
+            jnp.asarray(batch.n), jnp.asarray(batch.m))
+    host = eng.align_arrays(*args, band=spec.band, collect_tb=True,
+                            t_max=spec.t_max)
+    dev = eng.align_arrays(*args, band=spec.band, collect_tb=True,
+                           t_max=spec.t_max, decode="device")
+    plane_bytes = np.asarray(host["tb"]).nbytes // batch.q_pad.shape[0]
+    assert plane_bytes == packed_tb_width(spec.band) * spec.t_max
+    ops, runs, lens = fetch_rle(dev)
+    rle_bytes = (ops.nbytes + runs.nbytes + lens.nbytes) \
+        // batch.q_pad.shape[0]
+    assert rle_bytes * 10 <= plane_bytes, (rle_bytes, plane_bytes)
+    # And the fetched RLE still joins into the oracle CIGARs.
+    assert rle_to_cigars(ops, runs, lens) == traceback_banded_batch(
+        np.asarray(host["tb"]), np.asarray(host["los"]), batch.n, batch.m,
+        spec.band)

@@ -66,6 +66,21 @@ def test_engine_mesh_lowering_has_no_collectives():
     assert collective_bytes_by_kind(txt)["total_bytes"] == 0
 
 
+def test_engine_mesh_lowering_with_device_decode_has_no_collectives():
+    """Fusing the on-device traceback walk under the same shard_map keeps
+    the program collective-free: the lockstep walk is per-pair, so it
+    shards with the batch like the DP itself."""
+    from repro.core import AlignmentEngine
+    from repro.roofline.hlo_collectives import collective_bytes_by_kind
+    mesh = make_debug_mesh(1, 1)
+    eng = AlignmentEngine(backend="reference", mesh=mesh)
+    fn = eng.sharded_runner(band=16, collect_tb=True, t_max=96,
+                            decode="device")
+    specs = alignment_input_specs(8, 64, 64)
+    txt = fn.lower(*specs).compile().as_text()
+    assert collective_bytes_by_kind(txt)["total_bytes"] == 0
+
+
 def test_alignment_lowering_has_no_collectives():
     """Tile-level parallelism needs no inter-tile communication (paper
     §V-A) — the compiled alignment program must contain zero collective

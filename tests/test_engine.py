@@ -88,6 +88,46 @@ def test_align_batch_pallas_matches_reference_200_pairs():
         np.testing.assert_array_equal(out_ref[k], out_pal[k], err_msg=k)
 
 
+def test_edit_distance_batch_full_engine_path():
+    """edit_distance_batch runs the full engine dispatch (trimmed t_max +
+    packed tb + batched decode) and matches the exact full_dp edit
+    distance on a ragged batch; device- and host-decoded CIGARs agree
+    and re-score to the distance."""
+    from repro.core import full_dp_score
+    from repro.core.banded import traceback_banded_batch
+    rng = np.random.default_rng(47)
+    L = 128
+    N = 8
+    q = np.full((N, L), 4, np.int8)
+    r = np.full((N, L), 4, np.int8)
+    n = np.zeros(N, np.int32)
+    m = np.zeros(N, np.int32)
+    for i in range(N):
+        la = int(rng.integers(40, 90))
+        lb = la + int(rng.integers(-6, 7))
+        a = rng.integers(0, 4, la).astype(np.int8)
+        b = a[:lb].copy() if lb <= la else np.concatenate(
+            [a, rng.integers(0, 4, lb - la).astype(np.int8)])
+        mut = rng.integers(0, lb, 3)
+        b[mut] = (b[mut] + 1) % 4
+        q[i, :la], r[i, :lb], n[i], m[i] = a, b, la, lb
+    d_host = edit_distance_batch(q, r, n, m, with_traceback=True)
+    # The trimmed sweep is recorded and actually trims the padded 2L.
+    assert d_host["t_max"] is not None and d_host["t_max"] < 2 * L
+    assert d_host["tb"].shape[1] == d_host["t_max"]  # packed plane trimmed
+    oracle = np.array([-full_dp_score(q[i, :n[i]], r[i, :m[i]],
+                                      EDIT_DISTANCE) for i in range(N)])
+    np.testing.assert_array_equal(d_host["distance"], oracle)
+
+    d_dev = edit_distance_batch(q, r, n, m, with_traceback=True,
+                                decode="device")
+    np.testing.assert_array_equal(d_dev["distance"], oracle)
+    host_cigs = traceback_banded_batch(np.asarray(d_host["tb"]),
+                                       np.asarray(d_host["los"]), n, m,
+                                       d_host["band"])
+    assert d_dev["cigars"] == host_cigs
+
+
 def test_edit_distance_batch_pallas_matches_reference_200_pairs():
     reads, refs = _mixed_reads(200, (30, 70, 110), seed=13)
     L = 128
@@ -254,6 +294,29 @@ def test_lengths_above_largest_bucket_edge():
                               len(reads[i]), len(refs[i]), sc=MINIMAP2,
                               band=int(out["band"][i]))
         assert int(single["score"]) == out["score"][i], i
+
+
+def test_plan_buckets_band_cap_lifts_100_limit():
+    """band_cap widens the B = min(w + 0.01 L, cap) ceiling for long-read
+    scenarios without editing library code; the default stays 100."""
+    from repro.core import DEFAULT_BAND_CAP
+    from repro.core.scoring import adaptive_bandwidth
+    q_lens = r_lens = [12_000, 15_000]
+    default = plan_buckets(q_lens, r_lens, base_bandwidth=120)
+    wide = plan_buckets(q_lens, r_lens, base_bandwidth=120, band_cap=400)
+    assert DEFAULT_BAND_CAP == 100
+    assert all(g.spec.band == 100 for g in default)  # capped today
+    assert all(g.spec.band > 100 for g in wide)
+    cls = 16384  # both pairs land in the largest default edge class
+    assert wide[0].spec.band == adaptive_bandwidth(cls, 120, cap=400)
+    # The engine forwards its band_cap into the scheduler.
+    eng = AlignmentEngine(backend="reference", band_cap=400,
+                          base_bandwidth=20, capacity=1)
+    rng = np.random.default_rng(3)
+    reads = [rng.integers(0, 4, 9000).astype(np.int8)]
+    refs = [reads[0].copy()]
+    out = eng.align(reads, refs)
+    assert out["band"][0] == adaptive_bandwidth(16384, 20, cap=400) > 100
 
 
 def test_align_arrays_rejects_short_t_max():
