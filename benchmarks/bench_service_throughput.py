@@ -1,0 +1,113 @@
+"""Streaming AlignmentService throughput (open-loop arrival sweep).
+
+The serving-layer numbers the co-processor pitch stands on (DESIGN.md
+§8): a mixed-length request stream is pushed through the
+`repro.serve.AlignmentService` — bounded-queue admission, continuous
+length-class micro-batching, depth-k engine pipeline, device-side CIGAR
+decode — first closed-loop (submit as fast as admission allows, the
+saturation throughput), then open-loop at fractions of that rate (the
+latency a client actually sees when the service is not saturated).
+
+Rows (per backend; pallas rows only with a TPU attached, as in
+bench_engine_throughput — interpret mode is not a performance mode):
+
+  service/closed_loop       saturation: reads/s, batch fill ratio,
+                            p50/p99 latency, dispatches, bytes fetched
+  service/open_loop_<f>x    offered arrival rate = f x closed-loop rate
+
+The `derived` fields are the service metrics dict flattened — the same
+numbers `AlignmentService.stats()` serves live. Recorded into
+BENCH_engine.json by CI (`--only engine` matches this module's
+"engine_service" registration).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import MINIMAP2, AlignmentEngine
+from repro.serve import AlignmentService
+
+#: Mixed length classes: two dispatch buckets, so the dispatcher really
+#: micro-batches (per-class groups) instead of one degenerate bucket.
+LENGTHS = (90, 250)
+
+
+def _request_pool(n_pairs: int, seed: int = 73):
+    rng = np.random.default_rng(seed)
+    pairs = []
+    for k in range(n_pairs):
+        L = LENGTHS[k % len(LENGTHS)]
+        read = rng.integers(0, 4, L).astype(np.int8)
+        ref = read.copy()
+        mut = rng.integers(0, L, max(L // 25, 1))
+        ref[mut] = (ref[mut] + 1) % 4
+        pairs.append((read, ref))
+    return pairs
+
+
+def _drive(engine, pairs, *, rate: float | None, max_wait_ms: float):
+    """One service run: submit every pair (at `rate` reads/s when open
+    loop), resolve every future, return (wall_s, stats)."""
+    with AlignmentService(engine, collect_tb=True,
+                          max_wait_ms=max_wait_ms) as svc:
+        t0 = time.perf_counter()
+        futures = []
+        for k, (read, ref) in enumerate(pairs):
+            if rate:
+                delay = t0 + k / rate - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+            futures.append(svc.submit(read, ref))
+        for f in futures:
+            f.result()
+        wall = time.perf_counter() - t0
+        stats = svc.stats()
+    return wall, stats
+
+
+def _derived(stats, wall, n_pairs, extra=""):
+    return (f"reads_per_s={n_pairs / wall:.4g};"
+            f"fill_ratio={stats['fill_ratio']:.2f};"
+            f"p50_ms={stats['p50_ms']:.2f};p99_ms={stats['p99_ms']:.2f};"
+            f"dispatches={stats['dispatches']};"
+            f"bytes_fetched={stats['bytes_fetched']};"
+            f"flush_timeout={stats['flush_timeout']}{extra}")
+
+
+def run(backends=("reference", "pallas"), smoke=False):
+    n_pairs = 16 if smoke else 96
+    fracs = (0.5,) if smoke else (0.5, 0.8)
+    max_wait_ms = 4.0
+    pairs = _request_pool(n_pairs)
+    for backend in backends:
+        if backend == "pallas":
+            from repro.core.backends.pallas import _default_interpret
+            if _default_interpret():
+                print("service: pallas rows skipped (interpret mode, "
+                      "no TPU)", file=sys.stderr)
+                continue
+        engine = AlignmentEngine(backend=backend, sc=MINIMAP2, capacity=16)
+        # Warm the jit caches: the timed runs measure serving, not XLA
+        # compilation of each (bucket, band, t_max) program.
+        _drive(engine, pairs, rate=None, max_wait_ms=max_wait_ms)
+
+        wall, stats = _drive(engine, pairs, rate=None,
+                             max_wait_ms=max_wait_ms)
+        closed_rate = n_pairs / wall
+        emit("service/closed_loop", wall / n_pairs * 1e6,
+             _derived(stats, wall, n_pairs, f";n_pairs={n_pairs}"),
+             backend=backend)
+
+        for frac in fracs:
+            rate = closed_rate * frac
+            wall_o, stats_o = _drive(engine, pairs, rate=rate,
+                                     max_wait_ms=max_wait_ms)
+            emit(f"service/open_loop_{frac}x", wall_o / n_pairs * 1e6,
+                 _derived(stats_o, wall_o, n_pairs,
+                          f";offered_rate={rate:.4g}"),
+                 backend=backend)

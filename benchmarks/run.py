@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig13    — long-read throughput vs ASIC style       (paper Fig. 13)
   fig14    — edit distance w/ and w/o traceback       (paper Fig. 14)
   engine   — engine dispatch-pipeline throughput      (trimming win)
+  engine_service — streaming AlignmentService sweep   (open-loop serving)
   roofline — per-cell roofline terms from the dry-run (EXPERIMENTS §Roofline)
 
 Usage: PYTHONPATH=src python -m benchmarks.run
@@ -35,8 +36,8 @@ import traceback
 from benchmarks import (bench_engine_throughput, bench_fig9_fig10_dse,
                         bench_fig11_pim_model, bench_fig12_short_reads,
                         bench_fig13_long_reads, bench_fig14_edit_distance,
-                        bench_roofline, bench_table1_complexity,
-                        bench_table5_accuracy)
+                        bench_roofline, bench_service_throughput,
+                        bench_table1_complexity, bench_table5_accuracy)
 from benchmarks.common import header, write_json
 
 MODULES = [
@@ -48,6 +49,9 @@ MODULES = [
     ("fig13", bench_fig13_long_reads),
     ("fig14", bench_fig14_edit_distance),
     ("engine", bench_engine_throughput),
+    # "engine_service" so CI's `--only engine` records the service rows
+    # into BENCH_engine.json alongside the engine pipeline rows.
+    ("engine_service", bench_service_throughput),
     ("roofline", bench_roofline),
 ]
 

@@ -1,12 +1,16 @@
 """End-to-end driver: the RAPIDx co-processor serving pipeline.
 
-Simulates the paper's deployment (Fig. 2a): a sequencing stream produces
-error-laden reads of MIXED lengths; the host-side AlignmentEngine groups
-them into per-length-class dispatch buckets (each with its own adaptive
-band width B = min(w + 0.01L, 100)), dispatches padded batches to the
-selected execution backend (reference lax.scan or the Pallas wavefront
-kernel), scatters scores + CIGARs back into arrival order, and reports
-accuracy vs the full-DP oracle plus throughput.
+Simulates the paper's deployment (Fig. 2a) as a thin client of the
+streaming `repro.serve.AlignmentService`: a sequencing stream produces
+error-laden reads of MIXED lengths and submits them one at a time; the
+service's background dispatcher micro-batches pending requests by
+length class (each class with its own adaptive band width
+B = min(w + 0.01L, 100)), drives the AlignmentEngine's depth-k dispatch
+pipeline on the selected execution backend (reference lax.scan or the
+Pallas wavefront kernel, device-side CIGAR decode), and streams scores +
+CIGARs back in arrival order. The run reports accuracy vs the full-DP
+oracle plus the service metrics dict (requests/s, p50/p99 latency,
+batch fill ratio, bytes fetched).
 
     PYTHONPATH=src python examples/genomics_pipeline.py \
         [--reads 192] [--backend auto]
@@ -18,7 +22,8 @@ import time
 import numpy as np
 import jax
 
-from repro.core import AlignmentEngine, MINIMAP2, full_dp_score, plan_buckets
+from repro.core import AlignmentEngine, MINIMAP2, cigar_score, full_dp_score
+from repro.serve import AlignmentService
 
 
 def main():
@@ -30,6 +35,7 @@ def main():
                     choices=["illumina", "pacbio", "ont_2d"])
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "reference", "pallas"])
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--oracle-sample", type=int, default=24)
     args = ap.parse_args()
 
@@ -39,7 +45,7 @@ def main():
     genome = random_genome(500_000, seed=7)
     sim = ReadSimulator(genome, args.profile, seed=8)
 
-    # 1. "Sequencer" emits mixed-length reads; host gathers (read,
+    # 1. "Sequencer" emits mixed-length reads; the host gathers (read,
     #    candidate window) pairs (seeding/filtering upstream of RAPIDx's
     #    scope).
     lengths = [args.read_len // 2, args.read_len, args.read_len * 2]
@@ -49,24 +55,31 @@ def main():
         refs.append(ref)
         reads.append(read)
 
-    # 2. The engine's multi-bucket scheduler (sequence-level parallelism,
-    #    paper Fig. 6b): one dispatch group per length class.
-    groups = plan_buckets([len(x) for x in reads], [len(x) for x in refs],
-                          capacity=64)
-    for g in groups:
-        print(f"bucket: q_len={g.spec.q_len} r_len={g.spec.r_len} "
-              f"band={g.spec.band} pairs={len(g.indices)}")
-
-    # 3. Dispatch to the accelerator backend.
+    # 2. Stand up the service over the engine: the dispatcher thread owns
+    #    the multi-bucket scheduler (sequence-level parallelism, paper
+    #    Fig. 6b) and keeps the backend fed while we submit.
     engine = AlignmentEngine(backend=args.backend, sc=MINIMAP2, capacity=64)
     print(f"backend: {engine.backend_name}")
     t0 = time.time()
-    out = engine.align(reads, refs, collect_tb=False)
+    with AlignmentService(engine, collect_tb=True,
+                          max_wait_ms=args.max_wait_ms) as svc:
+        results = list(svc.submit_stream(zip(reads, refs)))
+        stats = svc.stats()
     dt = time.time() - t0
-    scores = out["score"]
+    scores = np.array([r["score"] for r in results])
     assert scores.shape == (args.reads,)
     print(f"aligned {args.reads} reads in {dt:.2f}s "
-          f"({args.reads / dt:.0f} reads/s on CPU)")
+          f"({args.reads / dt:.0f} reads/s on {engine.backend_name})")
+    print(f"service: fill_ratio={stats['fill_ratio']:.2f} "
+          f"p50={stats['p50_ms']:.1f}ms p99={stats['p99_ms']:.1f}ms "
+          f"dispatches={stats['dispatches']} "
+          f"bytes_fetched={stats['bytes_fetched']}")
+
+    # 3. Results arrive in arrival order; each CIGAR must re-score to its
+    #    reported alignment score (global mode: whole pair).
+    for i in (0, args.reads // 2, args.reads - 1):
+        got = cigar_score(results[i]["cigar"], reads[i], refs[i], MINIMAP2)
+        assert got == scores[i], (i, got, scores[i])
 
     # 4. Validate a sample against the full-DP oracle (stride over the
     #    stream so every length class is covered).

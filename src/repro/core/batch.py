@@ -3,14 +3,21 @@
 The paper batches kt (segments x tiles) sequence pairs per dispatch; the
 host groups reads by length so each ReRAM segment's band width matches.
 Here: bucket by padded length class, pick the adaptive band per class
-(B = min(w + 0.01 L, 100), §IV-B1), pad, and run the selected backend.
-Work is split into fixed-capacity "dispatch" groups so XLA compiles one
-program per (bucket shape, band) — mirroring the fixed CM geometry.
+(B = min(w + 0.01 L, band_cap), §IV-B1), pad, and run the selected
+backend in two phases — `enqueue_dispatch` (async, device-resident) and
+`finalize_dispatch` (materialise + decode). Work is split into
+fixed-capacity "dispatch" groups so XLA compiles one program per
+(bucket shape, band, t_max) — mirroring the fixed CM geometry. On the
+default `decode="device"` path finalize fetches only trimmed RLE CIGAR
+arrays; the packed traceback plane reaches the host only on the
+`decode="host"` oracle / CPU-fallback path (DESIGN.md §5).
 
 `plan_buckets` is the multi-bucket scheduler: it partitions a ragged
 request into per-length-class `DispatchGroup`s, each remembering the
 caller positions of its members so results scatter back into the original
-read order (see `core.engine.AlignmentEngine`).
+read order (see `core.engine.AlignmentEngine`, and
+`repro.serve.AlignmentService` for the streaming front end that feeds
+these phases continuously).
 """
 
 from __future__ import annotations
@@ -53,9 +60,6 @@ def trimmed_sweep(q_lens, r_lens, q_len: int, r_len: int) -> int:
                   + np.asarray(r_lens, np.int64)).max())
     t_max = int(-(-t_true // TRIM_QUANTUM) * TRIM_QUANTUM)
     return min(t_max, q_len + r_len)
-
-
-_trimmed_sweep = trimmed_sweep  # backward-compat alias
 
 
 def _round_up(x: int, edges=DEFAULT_BUCKET_EDGES) -> int:

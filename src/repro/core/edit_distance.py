@@ -21,7 +21,7 @@ def edit_distance_batch(q_pad, r_pad, n, m, *, band: int | None = None,
                         with_traceback: bool = False,
                         backend: str = "reference",
                         backend_opts: dict | None = None,
-                        decode: str = "host"):
+                        decode: str = "device"):
     """Banded edit distance for a padded batch.
 
     Runs the degenerate scoring through the full engine dispatch path
@@ -30,9 +30,10 @@ def edit_distance_batch(q_pad, r_pad, n, m, *, band: int | None = None,
     the packed 2-flags-per-byte layout of the backend contract — the
     paper's reconfigurable data flow: same engine, different scoring
     constants. Returns dict with 'distance' ((N,) int32), 'band', and
-    the trimmed 't_max'; with_traceback adds either the raw planes
-    ('tb'/'los', decode="host") or on-device-decoded 'cigars'
-    (decode="device" — the packed plane never reaches the host).
+    the trimmed 't_max'; with_traceback adds on-device-decoded 'cigars'
+    (decode="device", the default everywhere in the stack — the packed
+    plane never reaches the host) or, with decode="host", the raw
+    packed planes ('tb'/'los') for the host-decoder oracle path.
     distance = -score under the EDIT_DISTANCE scoring.
     """
     from repro.core.batch import trimmed_sweep

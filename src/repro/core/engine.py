@@ -34,7 +34,10 @@ engine
 
 All backends return bit-identical results (integer DP) — the engine is a
 pure scheduling layer. Layering and the backend contract are documented
-in DESIGN.md.
+in DESIGN.md. `engine.align` is the one-shot entry point; the streaming
+front-end that keeps this pipeline continuously fed from a live request
+stream is `repro.serve.AlignmentService`, which drives the same
+`plan` / `enqueue_group` / `finalize_group` primitives (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -47,13 +50,39 @@ import numpy as np
 from repro.core.backends import available_backends, get_backend, \
     resolve_backend
 from repro.core.batch import (DEFAULT_BAND_CAP, DEFAULT_BUCKET_EDGES,
-                              default_base_bandwidth, enqueue_dispatch,
-                              finalize_dispatch, pad_group, plan_buckets,
-                              run_dispatch)
+                              BucketSpec, default_base_bandwidth,
+                              enqueue_dispatch, finalize_dispatch, pad_group,
+                              plan_buckets, run_dispatch)
 from repro.core.scoring import ScoringConfig, MINIMAP2, adaptive_bandwidth
 
 #: Result keys every backend returns for each pair (original read order).
 SCALAR_KEYS = ("score", "final_lo", "best_score", "best_i", "best_j")
+
+
+@dataclasses.dataclass
+class PendingDispatch:
+    """One enqueued (device-resident, not yet fetched) dispatch group.
+
+    Produced by `AlignmentEngine.enqueue_group` and consumed by
+    `AlignmentEngine.finalize_group`. Between the two calls the group's
+    result buffers live only on the device (JAX async dispatch), so a
+    caller holding several PendingDispatch handles is exactly the
+    engine's lookahead pipeline — `engine.align` keeps one in flight
+    (depth 1); the streaming `serve.AlignmentService` keeps up to its
+    `max_inflight_groups`.
+    """
+    spec: BucketSpec
+    n: np.ndarray        # (N_pad,) true query lengths incl. dummy pairs
+    m: np.ndarray        # (N_pad,) true reference lengths
+    outs: list           # raw per-slice backend result dicts (device)
+    num_real: int        # request pairs before dummy padding
+    collect_tb: bool
+    mode: str
+
+    @property
+    def num_slots(self) -> int:
+        """Padded dispatch slots (N_pad) — the fill-ratio denominator."""
+        return int(self.n.shape[0])
 
 
 def _check_t_max(t_max, n, m) -> None:
@@ -217,6 +246,55 @@ class AlignmentEngine:
                                 t_max=t_max, decode=decode)
 
     # ------------------------------------------------------------------
+    # Group-at-a-time pipeline primitives (the service's driving API).
+    # ------------------------------------------------------------------
+    def plan(self, q_lens, r_lens):
+        """Plan per-length-class `DispatchGroup`s for a ragged request
+        under this engine's bucketing config (edges, band_cap, capacity,
+        base_bandwidth) — the scheduler `align` and the streaming
+        `serve.AlignmentService` share."""
+        return plan_buckets(q_lens, r_lens,
+                            base_bandwidth=self.base_bandwidth,
+                            capacity=self.capacity,
+                            edges=self.bucket_edges,
+                            band_cap=self.band_cap)
+
+    def enqueue_group(self, reads, refs, spec: BucketSpec, *,
+                      mode: str = "global",
+                      collect_tb: bool = False) -> PendingDispatch:
+        """Pad one length-class's member pairs and enqueue them on the
+        device (async — no host sync). `reads`/`refs` are the group
+        members in group order (the caller keeps the scatter indices).
+        Returns the `PendingDispatch` handle for `finalize_group`."""
+        t_max = spec.t_max if self.trim else None
+        q_pad, r_pad, n, m = pad_group(
+            reads, refs, spec, pad_multiple=spec.capacity * self.num_shards)
+        if self.mesh is not None:
+            run = self.sharded_runner(
+                band=spec.band, collect_tb=collect_tb, mode=mode,
+                t_max=t_max, decode=self.decode)
+        else:
+            run = functools.partial(
+                self.backend.run, sc=self.sc, band=spec.band,
+                adaptive=self.adaptive, collect_tb=collect_tb,
+                mode=mode, t_max=t_max, decode=self.decode)
+        outs = enqueue_dispatch(run, q_pad, r_pad, n, m,
+                                capacity=spec.capacity * self.num_shards)
+        return PendingDispatch(spec=spec, n=n, m=m, outs=outs,
+                               num_real=len(reads), collect_tb=collect_tb,
+                               mode=mode)
+
+    def finalize_group(self, pending: PendingDispatch) -> dict:
+        """Materialise an enqueued group: blocks only on *that* group's
+        device work, strips dummy padding, and (with collect_tb) joins
+        its CIGARs per the engine's decode stage."""
+        return finalize_dispatch(pending.outs, pending.n, pending.m,
+                                 band=pending.spec.band,
+                                 num_real=pending.num_real,
+                                 collect_tb=pending.collect_tb,
+                                 mode=pending.mode, decode=self.decode)
+
+    # ------------------------------------------------------------------
     # Ragged multi-bucket path (lists in, original-order numpy out).
     # ------------------------------------------------------------------
     def align(self, reads, refs, *, mode: str = "global",
@@ -247,46 +325,26 @@ class AlignmentEngine:
         out["band"] = np.zeros(N, np.int32)
         cigars: list = [None] * N
 
-        groups = plan_buckets([len(x) for x in reads],
-                              [len(x) for x in refs],
-                              base_bandwidth=self.base_bandwidth,
-                              capacity=self.capacity,
-                              edges=self.bucket_edges,
-                              band_cap=self.band_cap)
-        shards = self.num_shards
+        groups = self.plan([len(x) for x in reads],
+                           [len(x) for x in refs])
 
         def enqueue(g):
             idx = g.indices
-            t_max = g.spec.t_max if self.trim else None
-            q_pad, r_pad, n, m = pad_group(
-                [reads[i] for i in idx], [refs[i] for i in idx], g.spec,
-                pad_multiple=g.spec.capacity * shards)
-            if self.mesh is not None:
-                run = self.sharded_runner(
-                    band=g.spec.band, collect_tb=collect_tb, mode=mode,
-                    t_max=t_max, decode=self.decode)
-            else:
-                run = functools.partial(
-                    self.backend.run, sc=self.sc, band=g.spec.band,
-                    adaptive=self.adaptive, collect_tb=collect_tb,
-                    mode=mode, t_max=t_max, decode=self.decode)
-            outs = enqueue_dispatch(run, q_pad, r_pad, n, m,
-                                    capacity=g.spec.capacity * shards)
-            return g, n, m, outs
+            pd = self.enqueue_group([reads[i] for i in idx],
+                                    [refs[i] for i in idx], g.spec,
+                                    mode=mode, collect_tb=collect_tb)
+            return g, pd
 
         # Depth-1 lookahead pipeline: group k+1 is enqueued on-device
         # before group k is materialised, so decode overlaps compute
         # while only two groups' buffers are ever live.
         pending = enqueue(groups[0]) if groups else None
         for k in range(len(groups)):
-            g, n, m, outs = pending
+            g, pd = pending
             pending = enqueue(groups[k + 1]) if k + 1 < len(groups) \
                 else None
             idx = g.indices
-            merged = finalize_dispatch(outs, n, m, band=g.spec.band,
-                                       num_real=len(idx),
-                                       collect_tb=collect_tb, mode=mode,
-                                       decode=self.decode)
+            merged = self.finalize_group(pd)
             for key in SCALAR_KEYS:
                 out[key][idx] = merged[key]
             out["band"][idx] = g.spec.band
@@ -298,5 +356,6 @@ class AlignmentEngine:
         return out
 
 
-__all__ = ["AlignmentEngine", "SCALAR_KEYS", "available_backends",
-           "get_backend", "resolve_backend", "run_dispatch"]
+__all__ = ["AlignmentEngine", "PendingDispatch", "SCALAR_KEYS",
+           "available_backends", "get_backend", "resolve_backend",
+           "run_dispatch"]

@@ -1,12 +1,15 @@
 """Alignment serving launcher — the paper's co-processor role.
 
-Accepts a stream of read batches (simulated here), buckets by length,
-dispatches to the shard_map'd adaptive banded aligner across all local
-devices, and reports scores/throughput. The same binary on a TPU slice
-serves the production mesh (the dry-run compiles exactly this step at
-16x16 and 2x16x16).
+A thin client of the streaming `repro.serve.AlignmentService`: a
+simulated sequencer emits read/window pairs at an open-loop arrival
+rate, the service's background dispatcher micro-batches them by length
+class and drives the mesh-sharded AlignmentEngine's dispatch pipeline
+(device decode, depth-k lookahead), and the run reports the service
+metrics dict — requests/s, p50/p99 latency, batch fill ratio, bytes
+fetched. The same binary on a TPU slice serves the production mesh
+(the dry-run compiles exactly this dispatch at 16x16 and 2x16x16).
 
-    PYTHONPATH=src python -m repro.launch.serve --batches 4 --reads 128
+    PYTHONPATH=src python -m repro.launch.serve --reads 512 --rate 2000
 """
 
 from __future__ import annotations
@@ -15,45 +18,69 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.rapidx import CONFIG as RAPIDX
-from repro.core.distributed import make_aligner
-from repro.data.genome import simulate_read_pairs
+from repro.core.engine import AlignmentEngine
+from repro.data.genome import ReadSimulator, random_genome
 from repro.launch.mesh import make_debug_mesh
+from repro.serve import AlignmentService
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batches", type=int, default=4)
-    ap.add_argument("--reads", type=int, default=128)
-    ap.add_argument("--read-len", type=int, default=150)
+    ap.add_argument("--reads", type=int, default=512,
+                    help="total requests to stream through the service")
+    ap.add_argument("--read-len", type=int, default=150,
+                    help="base read length; the stream mixes 1x/2x")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate in reads/s "
+                         "(0 = closed loop, submit as fast as accepted)")
     ap.add_argument("--profile", default="illumina")
+    ap.add_argument("--capacity", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--no-mesh", action="store_true",
+                    help="single-device engine (skip shard_map)")
     args = ap.parse_args()
+    if args.reads <= 0:
+        ap.error("--reads must be positive")
 
     n_dev = len(jax.devices())
-    mesh = make_debug_mesh(data=n_dev, model=1)
-    band = RAPIDX.band_for(args.read_len)
-    aligner = make_aligner(mesh, RAPIDX.scoring, band=band,
-                           collect_tb=False)
-    print(f"[serve] devices={n_dev} band={band} "
-          f"scoring={RAPIDX.scoring.name}")
+    mesh = None if args.no_mesh else make_debug_mesh(data=n_dev, model=1)
+    engine = AlignmentEngine(backend="auto", sc=RAPIDX.scoring,
+                             capacity=args.capacity, mesh=mesh)
+    print(f"[serve] devices={n_dev} backend={engine.backend_name} "
+          f"shards={engine.num_shards} scoring={RAPIDX.scoring.name}")
 
-    total, t_total = 0, 0.0
-    for b in range(args.batches):
-        q, r, n, m = simulate_read_pairs(args.reads, args.read_len,
-                                         args.profile, seed=100 + b)
-        t0 = time.time()
-        out = aligner(jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
-                      jnp.asarray(m))
-        scores = np.asarray(out["score"])
-        dt = time.time() - t0
-        total += args.reads
-        t_total += dt
-        print(f"[serve] batch {b}: {args.reads} reads in {dt*1e3:.0f}ms "
-              f"mean_score={scores.mean():.1f}")
-    print(f"[serve] total {total} reads, {total / t_total:.0f} reads/s")
+    genome = random_genome(1_000_000, seed=7)
+    sim = ReadSimulator(genome, args.profile, seed=8)
+    lengths = (args.read_len, args.read_len * 2)
+    pairs = []
+    for k in range(args.reads):
+        ref, read = sim.sample(lengths[k % len(lengths)])
+        pairs.append((read, ref))
+
+    period = 1.0 / args.rate if args.rate > 0 else 0.0
+    t0 = time.perf_counter()
+    with AlignmentService(engine, max_wait_ms=args.max_wait_ms) as svc:
+        futures = []
+        for k, (read, ref) in enumerate(pairs):
+            if period:  # open-loop: hold the offered arrival schedule
+                target = t0 + k * period
+                delay = target - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+            futures.append(svc.submit(read, ref))
+        scores = [f.result()["score"] for f in futures]
+        stats = svc.stats()
+    wall = time.perf_counter() - t0
+
+    mean = sum(int(s) for s in scores) / len(scores)
+    print(f"[serve] {args.reads} reads in {wall:.2f}s "
+          f"({args.reads / wall:.0f} reads/s) mean_score={mean:.1f}")
+    print(f"[serve] p50={stats['p50_ms']:.1f}ms p99={stats['p99_ms']:.1f}ms "
+          f"fill_ratio={stats['fill_ratio']:.2f} "
+          f"dispatches={stats['dispatches']} "
+          f"bytes_fetched={stats['bytes_fetched']}")
 
 
 if __name__ == "__main__":

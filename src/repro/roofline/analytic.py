@@ -103,8 +103,10 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
     # decoder (the walk's gathers re-touch at most the plane once).
     bytes_dev = pairs_dev * (2 * tb_bytes + seq_bytes)
     # Host-interface fetch per pair: the trimmed RLE arrays. Segment
-    # count ~ 2 boundaries per divergence event + 1 (DESIGN.md §4b).
-    rle_segments = 2 * ALIGN_DIVERGENCE * 2 * L + 1
+    # count ~ 2 boundaries per divergence event + 1 (DESIGN.md §4b),
+    # over the ~L ops of a near-diagonal alignment path (the path is L
+    # ops long, not the 2L wavefront sweeps it takes to compute it).
+    rle_segments = 2 * ALIGN_DIVERGENCE * L + 1
     host_fetch_bytes = pairs_dev * (5 * rle_segments + 4)
     terms = roofline_terms(flops_dev, bytes_dev, 0.0, hw)
     return {

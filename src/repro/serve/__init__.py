@@ -1,0 +1,12 @@
+"""Streaming serving layer over the AlignmentEngine (DESIGN.md §8).
+
+`AlignmentService` turns the one-shot engine into a long-running
+co-processor front end: bounded-queue admission, continuous
+length-class micro-batching, a depth-k device pipeline, per-request
+futures, and a metrics surface (`ServiceMetrics`).
+"""
+
+from repro.serve.metrics import ServiceMetrics
+from repro.serve.service import AlignmentService
+
+__all__ = ["AlignmentService", "ServiceMetrics"]

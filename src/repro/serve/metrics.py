@@ -1,0 +1,102 @@
+"""Metrics surface of the streaming AlignmentService.
+
+A thread-safe accumulator shared by the client threads (submit) and the
+dispatcher thread (flush / finalize). `snapshot()` renders the counters
+into the metrics dict the service exposes — the numbers an operator
+watches to see whether the co-processor is kept fed:
+
+  requests_per_s     completed requests over the service's wall clock
+  p50_ms / p99_ms    request latency percentiles (submit -> result)
+  fill_ratio         real pairs / padded dispatch slots, cumulative —
+                     1.0 means every dispatch ran with its compute
+                     memory full (paper Fig. 6's stated goal)
+  bytes_fetched      device->host result bytes materialised by finalize
+                     (RLE CIGARs + scalars on the decode="device" path)
+
+Latencies are kept in a bounded reservoir (the most recent
+`LATENCY_WINDOW` samples) so a long-lived service never grows without
+bound; percentiles are over that window.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+import numpy as np
+
+#: Latency samples retained for the percentile window.
+LATENCY_WINDOW = 100_000
+
+
+class ServiceMetrics:
+    """Thread-safe counters + latency reservoir for one service."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._t_start = time.perf_counter()
+        self._latencies = collections.deque(maxlen=LATENCY_WINDOW)
+        self.submitted = 0
+        self.completed = 0
+        self.dispatches = 0        # device dispatch groups enqueued
+        self.real_pairs = 0        # true pairs across all dispatches
+        self.padded_slots = 0      # padded slots across all dispatches
+        self.bytes_fetched = 0     # host bytes materialised by finalize
+        self.flush_fill = 0        # flushes triggered by min_fill
+        self.flush_timeout = 0     # flushes triggered by max_wait
+        self.flush_shutdown = 0    # flushes triggered by close()
+
+    # -- recording (called by service internals) -----------------------
+    def record_submit(self) -> None:
+        with self._lock:
+            self.submitted += 1
+
+    def record_flush(self, cause: str) -> None:
+        with self._lock:
+            if cause == "fill":
+                self.flush_fill += 1
+            elif cause == "timeout":
+                self.flush_timeout += 1
+            else:
+                self.flush_shutdown += 1
+
+    def record_dispatch(self, num_real: int, num_slots: int) -> None:
+        with self._lock:
+            self.dispatches += 1
+            self.real_pairs += num_real
+            self.padded_slots += num_slots
+
+    def record_results(self, latencies_s, nbytes: int) -> None:
+        with self._lock:
+            self.completed += len(latencies_s)
+            self.bytes_fetched += int(nbytes)
+            self._latencies.extend(latencies_s)
+
+    # -- rendering -----------------------------------------------------
+    def snapshot(self) -> dict:
+        """The service metrics dict (a point-in-time copy, safe to keep)."""
+        with self._lock:
+            elapsed = max(time.perf_counter() - self._t_start, 1e-9)
+            lat = np.asarray(self._latencies, np.float64)
+            out = {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "dispatches": self.dispatches,
+                "requests_per_s": self.completed / elapsed,
+                "fill_ratio": (self.real_pairs / self.padded_slots
+                               if self.padded_slots else 0.0),
+                "bytes_fetched": self.bytes_fetched,
+                "flush_fill": self.flush_fill,
+                "flush_timeout": self.flush_timeout,
+                "flush_shutdown": self.flush_shutdown,
+                "elapsed_s": elapsed,
+            }
+        for name, q in (("p50_ms", 50.0), ("p99_ms", 99.0)):
+            out[name] = (float(np.percentile(lat, q)) * 1e3
+                         if lat.size else 0.0)
+        out["mean_ms"] = float(lat.mean()) * 1e3 if lat.size else 0.0
+        return out
+
+
+__all__ = ["ServiceMetrics", "LATENCY_WINDOW"]

@@ -111,7 +111,8 @@ def test_edit_distance_batch_full_engine_path():
         mut = rng.integers(0, lb, 3)
         b[mut] = (b[mut] + 1) % 4
         q[i, :la], r[i, :lb], n[i], m[i] = a, b, la, lb
-    d_host = edit_distance_batch(q, r, n, m, with_traceback=True)
+    d_host = edit_distance_batch(q, r, n, m, with_traceback=True,
+                                 decode="host")
     # The trimmed sweep is recorded and actually trims the padded 2L.
     assert d_host["t_max"] is not None and d_host["t_max"] < 2 * L
     assert d_host["tb"].shape[1] == d_host["t_max"]  # packed plane trimmed

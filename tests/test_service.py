@@ -1,0 +1,267 @@
+"""Streaming AlignmentService: bit-identity with the one-shot engine,
+arrival-order scatter, flush policies, backpressure, clean shutdown.
+
+The service is a pure feeder: micro-batch composition (which requests
+happen to share a dispatch) must never change any per-pair result —
+scores, bands, and CIGARs are bit-identical to `engine.align` over the
+same pairs on both backends. The serving semantics under test are the
+ones the ISSUE names: in-order streaming over ragged interleaved
+lengths, the max-wait flush for a lone request, bounded-queue
+backpressure that blocks rather than drops, and a close() that resolves
+every accepted request.
+"""
+
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import AlignmentEngine, MINIMAP2
+from repro.serve import AlignmentService
+
+# Small tiles keep the interpret-mode kernel affordable on CPU.
+PALLAS_OPTS = {"batch_tile": 4, "chunk": 64}
+
+SCALARS = ("score", "final_lo", "best_score", "best_i", "best_j")
+
+
+def _mixed_pairs(n_pairs, lengths=(40, 90, 150), seed=3):
+    rng = np.random.default_rng(seed)
+    reads, refs = [], []
+    for k in range(n_pairs):
+        L = lengths[k % len(lengths)]
+        read = rng.integers(0, 4, L).astype(np.int8)
+        ref = read.copy()
+        mut = rng.integers(0, L, max(L // 20, 1))
+        ref[mut] = (ref[mut] + 1) % 4
+        reads.append(read)
+        refs.append(ref)
+    return reads, refs
+
+
+def _engine(backend, capacity=4):
+    opts = PALLAS_OPTS if backend == "pallas" else None
+    return AlignmentEngine(backend=backend, capacity=capacity,
+                           backend_opts=opts)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_service_bit_identical_to_one_shot_align(backend):
+    """Futures resolve to exactly the one-shot engine.align results —
+    every scalar, the band, and the CIGAR — on both backends."""
+    reads, refs = _mixed_pairs(10)
+    one = _engine(backend).align(reads, refs, collect_tb=True)
+    with AlignmentService(_engine(backend), collect_tb=True,
+                          max_wait_ms=2.0) as svc:
+        futures = [svc.submit(q, r) for q, r in zip(reads, refs)]
+        results = [f.result(timeout=300) for f in futures]
+    for i in range(len(reads)):
+        for k in SCALARS:
+            assert int(results[i][k]) == int(one[k][i]), (i, k)
+        assert int(results[i]["band"]) == int(one["band"][i])
+        assert results[i]["cigar"] == one["cigars"][i]
+
+
+def test_submit_stream_arrival_order_ragged_interleaved():
+    """submit_stream yields results in arrival order even though the
+    dispatcher regroups the ragged interleaved lengths into per-class
+    micro-batches that complete out of submission order."""
+    reads, refs = _mixed_pairs(30, lengths=(30, 200, 60, 400), seed=11)
+    one = _engine("reference").align(reads, refs, collect_tb=True)
+    with AlignmentService(_engine("reference"), collect_tb=True,
+                          max_wait_ms=1.0) as svc:
+        out = list(svc.submit_stream(zip(reads, refs), window=8))
+    assert len(out) == len(reads)
+    for i in range(len(reads)):
+        assert int(out[i]["score"]) == int(one["score"][i]), i
+        assert out[i]["cigar"] == one["cigars"][i], i
+
+
+def test_max_wait_flush_fires_for_lone_request():
+    """A lone small request must dispatch after max_wait_ms even though
+    min_fill is far away — the latency-sensitive small-stream path."""
+    reads, refs = _mixed_pairs(1, lengths=(50,), seed=5)
+    svc = AlignmentService(_engine("reference", capacity=64),
+                           max_wait_ms=20.0, min_fill=64)
+    try:
+        fut = svc.submit(reads[0], refs[0])
+        res = fut.result(timeout=60)
+        assert int(res["score"]) == int(
+            _engine("reference").align(reads, refs)["score"][0])
+        stats = svc.stats()
+        assert stats["flush_timeout"] == 1
+        assert stats["flush_fill"] == 0
+        assert stats["completed"] == 1
+    finally:
+        svc.close()
+
+
+def test_min_fill_flush_does_not_wait():
+    """Once a full slice is pending the flush fires on fill, not on the
+    (deliberately huge) max-wait clock."""
+    reads, refs = _mixed_pairs(8, lengths=(60,), seed=7)
+    with AlignmentService(_engine("reference", capacity=4),
+                          max_wait_ms=60_000.0, min_fill=4) as svc:
+        t0 = time.perf_counter()
+        futures = [svc.submit(q, r) for q, r in zip(reads, refs)]
+        for f in futures:
+            f.result(timeout=300)
+        assert time.perf_counter() - t0 < 60.0  # nowhere near max_wait
+        assert svc.stats()["flush_fill"] >= 1
+
+
+def test_bounded_queue_backpressure_blocks_not_drops():
+    """With the dispatcher pinned, a full queue makes submit block (or
+    raise queue.Full with a timeout) — and every accepted request still
+    resolves once the dispatcher resumes: nothing is dropped."""
+    reads, refs = _mixed_pairs(6, lengths=(50,), seed=13)
+
+    gate = threading.Event()
+
+    class GatedEngine(AlignmentEngine):
+        def plan(self, q_lens, r_lens):
+            gate.wait(timeout=120)
+            return super().plan(q_lens, r_lens)
+
+    svc = AlignmentService(GatedEngine(backend="reference", capacity=1),
+                           max_queue=2, max_wait_ms=1.0, min_fill=1,
+                           max_batch=1)
+    try:
+        futures = [svc.submit(reads[0], refs[0])]  # dispatcher takes this
+        time.sleep(0.1)                            # ...and blocks on gate
+        futures += [svc.submit(q, r, timeout=5.0)
+                    for q, r in zip(reads[1:3], refs[1:3])]  # queue full
+        with pytest.raises(queue.Full):
+            svc.submit(reads[3], refs[3], timeout=0.1)
+
+        blocked_done = threading.Event()
+
+        def blocked_submit():
+            futures.append(svc.submit(reads[4], refs[4]))  # no timeout
+            blocked_done.set()
+
+        t = threading.Thread(target=blocked_submit, daemon=True)
+        t.start()
+        assert not blocked_done.wait(timeout=0.3)  # still blocked
+        gate.set()                                 # unpin the dispatcher
+        assert blocked_done.wait(timeout=120)
+        t.join()
+        results = [f.result(timeout=300) for f in futures]
+        assert len(results) == 4
+        one = _engine("reference").align(reads[:1], refs[:1])
+        assert all(int(r["score"]) == int(one["score"][0])
+                   for r in results)  # identical pairs, identical scores
+        assert svc.stats()["completed"] == 4
+    finally:
+        gate.set()
+        svc.close()
+
+
+def test_clean_shutdown_resolves_inflight_groups():
+    """close() with queued + in-flight work drains everything: every
+    accepted future resolves, none error, and submits after close are
+    refused."""
+    # 21 = 2 full fill-flushes of 8 + a 5-request tail that only the
+    # shutdown flush can dispatch (max_wait is effectively infinite).
+    reads, refs = _mixed_pairs(21, lengths=(40, 120), seed=17)
+    svc = AlignmentService(_engine("reference", capacity=4),
+                           max_wait_ms=10_000.0, min_fill=8,
+                           max_inflight_groups=2)
+    futures = [svc.submit(q, r) for q, r in zip(reads, refs)]
+    svc.close()  # flushes pending below min_fill + drains in-flight
+    assert all(f.done() for f in futures)
+    one = _engine("reference").align(reads, refs)
+    for i, f in enumerate(futures):
+        assert int(f.result()["score"]) == int(one["score"][i]), i
+    assert svc.stats()["flush_shutdown"] >= 1
+    with pytest.raises(RuntimeError):
+        svc.submit(reads[0], refs[0])
+
+
+def test_dispatcher_death_fails_futures_not_hangs():
+    """A backend error in the dispatcher surfaces on the futures and on
+    later submits — accepted requests never hang."""
+    boom = RuntimeError("backend exploded")
+
+    class DyingEngine(AlignmentEngine):
+        def enqueue_group(self, *a, **kw):
+            raise boom
+
+    svc = AlignmentService(DyingEngine(backend="reference", capacity=1),
+                           max_wait_ms=1.0, min_fill=1)
+    reads, refs = _mixed_pairs(2, lengths=(40,), seed=23)
+    fut = svc.submit(reads[0], refs[0])
+    with pytest.raises(RuntimeError):
+        fut.result(timeout=60)
+    deadline = time.perf_counter() + 60
+    with pytest.raises(RuntimeError):
+        while time.perf_counter() < deadline:  # until death is observed
+            svc.submit(reads[1], refs[1])
+            time.sleep(0.01)
+    svc.close()
+
+
+def test_partial_flush_failure_fails_every_future():
+    """enqueue dying on the SECOND group of a flush must still fail the
+    first group's futures exactly once and the rest exactly once — no
+    InvalidStateError, no future left unresolved."""
+    boom = RuntimeError("second group exploded")
+
+    class SecondGroupDies(AlignmentEngine):
+        _calls = 0
+
+        def enqueue_group(self, *a, **kw):
+            type(self)._calls += 1
+            if type(self)._calls >= 2:
+                raise boom
+            return super().enqueue_group(*a, **kw)
+
+    # Two length classes in one flush -> two enqueue_group calls.
+    reads, refs = _mixed_pairs(4, lengths=(40, 400), seed=29)
+    svc = AlignmentService(SecondGroupDies(backend="reference", capacity=4),
+                           max_wait_ms=10_000.0, min_fill=4)
+    futures = [svc.submit(q, r) for q, r in zip(reads, refs)]
+    for f in futures:
+        with pytest.raises(RuntimeError):
+            f.result(timeout=60)
+    svc.close()
+
+
+def test_finalize_failure_fails_inflight_futures():
+    """A fetch-side error (finalize_group raising) must fail that
+    group's futures instead of stranding them."""
+    boom = RuntimeError("fetch exploded")
+
+    class FinalizeDies(AlignmentEngine):
+        def finalize_group(self, pending):
+            raise boom
+
+    reads, refs = _mixed_pairs(3, lengths=(40,), seed=31)
+    svc = AlignmentService(FinalizeDies(backend="reference", capacity=4),
+                           max_wait_ms=1.0, min_fill=3)
+    futures = [svc.submit(q, r) for q, r in zip(reads, refs)]
+    for f in futures:
+        with pytest.raises(RuntimeError):
+            f.result(timeout=60)
+    svc.close()
+
+
+def test_metrics_surface_keys_and_fill_ratio():
+    """The stats dict carries the operator surface (rates, latency
+    percentiles, fill ratio, fetch bytes) with sane values."""
+    reads, refs = _mixed_pairs(12, lengths=(60,), seed=19)
+    with AlignmentService(_engine("reference", capacity=4),
+                          collect_tb=True, max_wait_ms=2.0) as svc:
+        for f in [svc.submit(q, r) for q, r in zip(reads, refs)]:
+            f.result(timeout=300)
+        stats = svc.stats()
+    for key in ("requests_per_s", "p50_ms", "p99_ms", "fill_ratio",
+                "bytes_fetched", "queue_depth", "inflight_groups",
+                "submitted", "completed", "dispatches"):
+        assert key in stats, key
+    assert stats["submitted"] == stats["completed"] == 12
+    assert 0.0 < stats["fill_ratio"] <= 1.0
+    assert stats["bytes_fetched"] > 0
+    assert stats["p99_ms"] >= stats["p50_ms"] > 0.0

@@ -1,12 +1,15 @@
 #!/usr/bin/env python
 """Fail on broken intra-repo links in markdown docs.
 
-Usage: python tools/check_docs_links.py README.md DESIGN.md [...]
+Usage: python tools/check_docs_links.py README.md DESIGN.md docs [...]
 
-Checks every inline markdown link ``[text](target)`` whose target is a
-relative path (http(s)/mailto/pure-anchor targets are skipped): the
-target, resolved against the containing file's directory with any
-``#fragment`` stripped, must exist in the repo. Run by the CI docs job.
+Arguments are markdown files or directories (a directory is expanded to
+every ``*.md`` under it, recursively). Checks every inline markdown link
+``[text](target)`` whose target is a relative path (http(s)/mailto/
+pure-anchor targets are skipped): the target, resolved against the
+containing file's directory with any ``#fragment`` stripped, must exist
+in the repo — so a README/DESIGN/PAPER_MAP reference to a deleted or
+renamed file fails CI. Run by the CI docs job.
 """
 
 from __future__ import annotations
@@ -34,23 +37,43 @@ def broken_links(md_path: Path) -> list[tuple[str, str]]:
     return bad
 
 
+def expand(names: list[str]) -> list[Path] | None:
+    """Markdown files for the given file/directory arguments, or None
+    if an argument is missing (itself a broken reference)."""
+    files: list[Path] = []
+    for name in names:
+        p = Path(name)
+        if p.is_dir():
+            found = sorted(p.rglob("*.md"))
+            if not found:
+                print(f"no .md files under directory: {name}",
+                      file=sys.stderr)
+                return None
+            files += found
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"missing doc file: {name}", file=sys.stderr)
+            return None
+    return files
+
+
 def main(argv: list[str]) -> int:
     if not argv:
-        print("usage: check_docs_links.py FILE.md [FILE.md ...]",
+        print("usage: check_docs_links.py FILE.md|DIR [...]",
               file=sys.stderr)
         return 2
+    files = expand(argv)
+    if files is None:
+        return 2
     bad = []
-    for name in argv:
-        p = Path(name)
-        if not p.exists():
-            print(f"missing doc file: {name}", file=sys.stderr)
-            return 2
+    for p in files:
         bad += broken_links(p)
     for doc, target in bad:
         print(f"BROKEN LINK {doc}: ({target})", file=sys.stderr)
     if bad:
         return 1
-    print(f"link check OK: {len(argv)} file(s)")
+    print(f"link check OK: {len(files)} file(s)")
     return 0
 
 
