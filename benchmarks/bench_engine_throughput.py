@@ -176,12 +176,43 @@ def run(backends=("reference", "pallas"), smoke=False):
              f"t_max={spec.t_max}", backend=backend)
 
         # Multi-class ragged request through the async enqueue/finalize
-        # pipeline, CIGAR decode included (the serving-shaped number).
+        # pipeline, CIGAR decode included (the serving-shaped number),
+        # measured A/B-interleaved against the same request through the
+        # persistent megakernel dispatch (ONE device program for all
+        # groups, single trimmed RLE fetch — DESIGN.md §10).
         rreads, rrefs = _ragged_request(n_pairs)
-        us_p = time_host_fn(eng_t.align, rreads, rrefs, collect_tb=True,
-                            iters=iters)
-        n_groups = len(plan_buckets([len(x) for x in rreads],
-                                    [len(x) for x in rrefs]))
+        eng_p = AlignmentEngine(backend=backend, sc=MINIMAP2,
+                                capacity=n_pairs, trim=True,
+                                base_bandwidth=64, dispatch="persistent")
+        us_p, us_pp = time_host_paired(
+            lambda: eng_t.align(rreads, rrefs, collect_tb=True),
+            lambda: eng_p.align(rreads, rrefs, collect_tb=True), iters)
+        groups = eng_t.plan([len(x) for x in rreads],
+                            [len(x) for x in rrefs])
+        n_groups = len(groups)
         emit("engine/ragged_tb_pipeline", us_p / n_pairs,
              f"reads_per_s={n_pairs / (us_p / 1e6):.4g};"
              f"groups={n_groups};n_pairs={n_pairs}", backend=backend)
+
+        # Roofline bound for the persistent request: per-group
+        # compute/memory overlap bound + ONE dispatch overhead charge
+        # (vs one per group pipelined) — the gap is the headroom the
+        # device-side loop leaves on this host.
+        from repro.roofline.analytic import (DISPATCH_OVERHEAD_S,
+                                             alignment_roofline)
+        bound_s = DISPATCH_OVERHEAD_S
+        for g in groups:
+            lens_g = [(len(rreads[i]) + len(rrefs[i])) / 2
+                      for i in g.indices]
+            a = alignment_roofline({
+                "length": sum(lens_g) / len(lens_g), "band": g.spec.band,
+                "global_batch": len(g.indices), "shape": "ragged",
+                "mesh_shape": [1], "dispatch": "persistent"})
+            bound_s += a["step_time_overlap_s"]
+        bound_us = bound_s * 1e6
+        emit("engine/persistent_dispatch", us_pp / n_pairs,
+             f"speedup_vs_pipelined={us_p / us_pp:.2f};"
+             f"roofline_bound_us={bound_us / n_pairs:.2f};"
+             f"roofline_gap={us_pp / bound_us:.1f};"
+             f"groups={n_groups};n_pairs={n_pairs};dispatch=persistent",
+             backend=backend)

@@ -70,13 +70,14 @@ def _drive(engine, pairs, *, rate: float | None, max_wait_ms: float):
     return wall, stats
 
 
-def _derived(stats, wall, n_pairs, extra=""):
+def _derived(engine, stats, wall, n_pairs, extra=""):
     return (f"reads_per_s={n_pairs / wall:.4g};"
             f"fill_ratio={stats['fill_ratio']:.2f};"
             f"p50_ms={stats['p50_ms']:.2f};p99_ms={stats['p99_ms']:.2f};"
             f"dispatches={stats['dispatches']};"
             f"bytes_fetched={stats['bytes_fetched']};"
-            f"flush_timeout={stats['flush_timeout']}{extra}")
+            f"flush_timeout={stats['flush_timeout']};"
+            f"dispatch={engine.dispatch}{extra}")
 
 
 def run(backends=("reference", "pallas"), smoke=False):
@@ -100,7 +101,8 @@ def run(backends=("reference", "pallas"), smoke=False):
                              max_wait_ms=max_wait_ms)
         closed_rate = n_pairs / wall
         emit("service/closed_loop", wall / n_pairs * 1e6,
-             _derived(stats, wall, n_pairs, f";n_pairs={n_pairs}"),
+             _derived(engine, stats, wall, n_pairs,
+                      f";n_pairs={n_pairs}"),
              backend=backend)
 
         for frac in fracs:
@@ -108,6 +110,6 @@ def run(backends=("reference", "pallas"), smoke=False):
             wall_o, stats_o = _drive(engine, pairs, rate=rate,
                                      max_wait_ms=max_wait_ms)
             emit(f"service/open_loop_{frac}x", wall_o / n_pairs * 1e6,
-                 _derived(stats_o, wall_o, n_pairs,
+                 _derived(engine, stats_o, wall_o, n_pairs,
                           f";offered_rate={rate:.4g}"),
                  backend=backend)

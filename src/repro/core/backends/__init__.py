@@ -38,6 +38,29 @@ stays the oracle and CPU fallback.
 `core.distributed`). Results are bit-identical across backends — integer
 DP, asserted by tests/test_engine.py.
 
+Backends additionally provide the persistent-dispatch entry point
+(`AlignmentEngine(dispatch="persistent")`, DESIGN.md §10):
+
+    run_persistent(groups, *, sc, adaptive, collect_tb, mode, decode,
+                   cell_dtype)
+      groups: sequence of (q_pad, r_pad, n, m, band, t_max) — one entry
+        per dispatch group, each with its own padded geometry, band and
+        trimmed sweep. ALL groups execute inside ONE device program
+        (single launch, zero per-group host sync): the reference backend
+        chains the per-group scans in one jit; the pallas backend grids
+        one megakernel over (group, batch-tile, step-chunk) with
+        per-group t_max/band honoured by masked chunk loops and band-lane
+        masking (kernels.banded_dp.persistent). The on-device RLE decode
+        is fused behind the compute, so with collect_tb the only host
+        traffic is the engine's single trimmed RLE fetch at the end
+        (decode="host" is rejected — the raw-plane contract exists only
+        on the pipelined path).
+      Returns ONE merged dict over sum(N_pad_g) rows in group-major
+      order: the scalar keys concatenated, plus (collect_tb) 'cig_ops' /
+      'cig_runs' column-padded to the longest group sweep and 'cig_len'.
+      Bit-exact with running each group through `run` (asserted by
+      tests/test_persistent_dispatch.py).
+
 Backends register lazily by module path so importing the registry never
 drags in pallas for reference-only users.
 """
@@ -78,6 +101,28 @@ def resolve_backend(name: str) -> str:
         platforms = {d.platform for d in jax.devices()}
         _AUTO_RESOLVED = "pallas" if "tpu" in platforms else "reference"
     return _AUTO_RESOLVED
+
+
+def merge_persistent_outputs(outs):
+    """Concatenate per-group result dicts into the group-major merged
+    layout of the `run_persistent` contract (device-side; jax-traceable).
+
+    Scalar keys concatenate directly. The RLE planes have per-group
+    column counts (each group's sweep length bounds its path length), so
+    they are zero-padded on the right to the widest group before the
+    concat — zero is the 'unused segment' op code, and `cig_len` already
+    bounds every consumer's read.
+    """
+    import jax.numpy as jnp
+    merged = {}
+    for key in outs[0]:
+        arrs = [o[key] for o in outs]
+        if key in ("cig_ops", "cig_runs"):
+            k_max = max(a.shape[1] for a in arrs)
+            arrs = [jnp.pad(a, ((0, 0), (0, k_max - a.shape[1])))
+                    for a in arrs]
+        merged[key] = jnp.concatenate(arrs)
+    return merged
 
 
 def get_backend(name="auto", **opts):

@@ -2,11 +2,20 @@
 
 The paper-faithful XLA path — the oracle every other backend must match
 bit-exactly (integer DP). This is the default on CPU/GPU hosts.
+
+Persistent dispatch (`run_persistent`) chains every group's scan — each
+with its NATIVE per-group geometry, band and trimmed sweep, so no group
+pays another group's padding — plus the fused on-device RLE decode into
+ONE jit program, cached per request signature. One launch and zero host
+round-trips replace the per-group pipeline; the device runs group k+1's
+wavefront while earlier groups' decode ops retire, exactly the device-
+side loop the Pallas megakernel expresses with its group grid axis.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 from repro.core import banded
 
@@ -16,17 +25,65 @@ class ReferenceBackend:
     name = "reference"
 
     def run(self, q_pad, r_pad, n, m, *, sc, band, adaptive=True,
-            collect_tb=True, mode="global", t_max=None, decode="host"):
+            collect_tb=True, mode="global", t_max=None, decode="host",
+            cell_dtype="int32"):
         out = banded.banded_align_batch(q_pad, r_pad, n, m, sc=sc,
                                         band=band, adaptive=adaptive,
                                         collect_tb=collect_tb, mode=mode,
-                                        t_max=t_max)
+                                        t_max=t_max, cell_dtype=cell_dtype)
         if collect_tb and decode == "device":
             # Fuse the lockstep walker onto the scan output: tb/los are
             # consumed while still device values and never reach the host.
             from repro.core.traceback_device import device_decode_result
             out = device_decode_result(out, n, m, band=band, mode=mode)
         return out
+
+    def run_persistent(self, groups, *, sc, adaptive=True, collect_tb=True,
+                       mode="global", decode="device", cell_dtype="int32"):
+        """All dispatch groups in ONE jit program (see the module doc and
+        the contract in `core.backends`). `groups` is a sequence of
+        (q_pad, r_pad, n, m, band, t_max) tuples; returns the merged
+        group-major result dict as device arrays — materialising any of
+        them is the caller's single end-of-request sync."""
+        import jax.numpy as jnp
+        if collect_tb and decode != "device":
+            raise ValueError(
+                "persistent dispatch fuses the traceback decode on-device;"
+                " decode='host' exists only on the pipelined path")
+        geom = tuple(
+            (int(q.shape[1]), int(r.shape[1]), int(band),
+             None if t_max is None else int(t_max), int(q.shape[0]))
+            for (q, r, n, m, band, t_max) in groups)
+        fn = _persistent_program(sc, adaptive, collect_tb, mode,
+                                 cell_dtype, geom)
+        flat = [jnp.asarray(a) for grp in groups for a in grp[:4]]
+        return fn(*flat)
+
+
+@functools.lru_cache(maxsize=128)
+def _persistent_program(sc, adaptive, collect_tb, mode, cell_dtype, geom):
+    """Build + jit the chained multi-group program for one request
+    signature (per-group shapes/bands/sweeps are static; the cache makes
+    repeat requests of the same signature launch with zero retracing)."""
+    import jax
+
+    from repro.core.backends import merge_persistent_outputs
+    from repro.core.traceback_device import device_decode_result
+
+    def program(*flat):
+        outs = []
+        for gi, (q_len, r_len, band, t_max, n_pad) in enumerate(geom):
+            q, r, n, m = flat[4 * gi:4 * gi + 4]
+            o = banded.banded_align_batch(
+                q, r, n, m, sc=sc, band=band, adaptive=adaptive,
+                collect_tb=collect_tb, mode=mode, t_max=t_max,
+                cell_dtype=cell_dtype)
+            if collect_tb:
+                o = device_decode_result(o, n, m, band=band, mode=mode)
+            outs.append(o)
+        return merge_persistent_outputs(outs)
+
+    return jax.jit(program)
 
 
 BACKEND = ReferenceBackend

@@ -43,6 +43,66 @@ NEG = jnp.int32(-(1 << 28))
 DEAD_THRESHOLD = -(1 << 27)
 
 # ---------------------------------------------------------------------------
+# Narrow-cell storage (paper §IV: the band-relative score spread is bounded
+# by the band geometry, so 8/16-bit cells suffice — the bit-width reduction
+# that drives RAPIDx's area/energy win). `cell_dtype="narrow"` keeps the
+# wavefront carry as int8 difference planes (u/v/x/y are the shifted
+# Eq. (4) quantities, always in [0, M + 2(o+e)]) plus an int16
+# band-RELATIVE H with one int32 per-pair base (the running max live H).
+# Every step reconstructs exact int32 values, runs the identical int32
+# update, and re-narrows — so results are bit-exact with cell_dtype="int32"
+# by construction whenever `validate_narrow_cells` accepts the config.
+# ---------------------------------------------------------------------------
+
+#: Dead-cell sentinel for the int16 band-relative H plane. Live cells
+#: store H - base in [-(INT16_SPREAD_LIMIT), 0]; anything at or below
+#: DEAD16 means "not alive" (reconstructed as NEG).
+DEAD16 = -(1 << 14)
+
+#: Max live band-relative spread representable without touching DEAD16.
+INT16_SPREAD_LIMIT = (1 << 14) - 1
+
+#: Max shifted difference value representable in the int8 u/v/x/y planes.
+INT8_DIFF_LIMIT = 127
+
+
+def narrow_spread_bound(sc: ScoringConfig, band: int) -> int:
+    """Conservative bound on max(H) - min(H) over live cells of one band
+    diagonal. Adjacent live lanes (i, j) and (i+1, j-1) differ by
+    dH(i+1, j-1) - dV(i, j), each in [-(o+e), A + o + e], so one lane
+    step moves H by at most A + 2(o+e); we additionally fold in the
+    mismatch penalty B for slack against boundary-override cells. Summed
+    over the band's B-1 lane gaps (rounded to `band` for headroom)."""
+    return band * (sc.match + sc.mismatch + sc.shift)
+
+
+def validate_narrow_cells(sc: ScoringConfig, band: int) -> None:
+    """Static overflow guard for `cell_dtype="narrow"` (paper §IV bound:
+    cell width is set by band x max-penalty, not sequence length).
+
+    Raises ValueError when (band, scoring) cannot be proven safe for the
+    int8 difference planes + int16 band-relative H carry. Called before
+    tracing, so a bad config fails loudly instead of silently wrapping.
+    """
+    diff_max = sc.M + sc.shift
+    if diff_max > INT8_DIFF_LIMIT:
+        raise ValueError(
+            f"narrow cells unsafe: shifted difference range "
+            f"match + 2*(gap_open+gap_extend) = {diff_max} exceeds the "
+            f"int8 limit {INT8_DIFF_LIMIT} for scoring {sc.name!r}; use "
+            f"cell_dtype='int32' or a smaller-penalty scoring config")
+    spread = narrow_spread_bound(sc, band)
+    if spread > INT16_SPREAD_LIMIT:
+        raise ValueError(
+            f"narrow cells unsafe: band-relative score spread bound "
+            f"band * (match + mismatch + 2*(gap_open+gap_extend)) = "
+            f"{band} * {sc.match + sc.mismatch + sc.shift} = {spread} "
+            f"exceeds the int16 live range {INT16_SPREAD_LIMIT}; shrink "
+            f"the band below "
+            f"{INT16_SPREAD_LIMIT // (sc.match + sc.mismatch + sc.shift)} "
+            f"or use cell_dtype='int32'")
+
+# ---------------------------------------------------------------------------
 # Packed traceback-plane layout (paper §III / §V-C3: 4-bit flags are the
 # whole point of RAPIDx's narrow-bit-width co-design — storing them one per
 # byte would double TBM traffic). Two band lanes share one byte:
@@ -111,11 +171,12 @@ def unpack_tb_lanes(packed, band: int) -> np.ndarray:
 
 class BandState(NamedTuple):
     lo: jnp.ndarray        # int32 — top row of the band on the current diag
-    u: jnp.ndarray         # (B,) int32 — dH' (shifted)
-    v: jnp.ndarray         # (B,) int32 — dV'
-    x: jnp.ndarray         # (B,) int32 — dE' (combined term)
-    y: jnp.ndarray         # (B,) int32 — dF'
-    H: jnp.ndarray         # (B,) int32 — absolute scores along the band
+    u: jnp.ndarray         # (B,) int32|int8 — dH' (shifted)
+    v: jnp.ndarray         # (B,) int32|int8 — dV'
+    x: jnp.ndarray         # (B,) int32|int8 — dE' (combined term)
+    y: jnp.ndarray         # (B,) int32|int8 — dF'
+    H: jnp.ndarray         # (B,) int32 absolute — or int16 base-relative
+    base: jnp.ndarray      # int32 — 0 (int32 cells) or the H base offset
     score: jnp.ndarray     # int32 — captured at t == n + m
     final_lo: jnp.ndarray  # int32 — lo at the final diagonal
     best: jnp.ndarray      # int32 — max H over all visited cells
@@ -133,24 +194,69 @@ def _shift_up(a, fill):
     return jnp.concatenate([a[1:], jnp.full((1,), fill, a.dtype)])
 
 
-def _init_state(band: int, mode: str = "global") -> BandState:
+def _init_state(band: int, mode: str = "global",
+                cell_dtype: str = "int32") -> BandState:
     """Diagonal t=0: only cell (0,0) is alive, with H=0 and zero deltas."""
-    z = jnp.zeros((band,), jnp.int32)
-    H = jnp.full((band,), NEG, jnp.int32).at[0].set(0)
+    if cell_dtype == "narrow":
+        z = jnp.zeros((band,), jnp.int8)
+        H = jnp.full((band,), DEAD16, jnp.int16).at[0].set(0)
+    else:
+        z = jnp.zeros((band,), jnp.int32)
+        H = jnp.full((band,), NEG, jnp.int32).at[0].set(0)
     best0 = jnp.int32(NEG if mode == "semiglobal" else 0)
     return BandState(lo=jnp.int32(0), u=z, v=z, x=z, y=z, H=H,
-                     score=jnp.int32(NEG), final_lo=jnp.int32(0),
-                     best=best0, best_i=jnp.int32(0),
-                     best_j=jnp.int32(0))
+                     base=jnp.int32(0), score=jnp.int32(NEG),
+                     final_lo=jnp.int32(0), best=best0,
+                     best_i=jnp.int32(0), best_j=jnp.int32(0))
+
+
+def _widen(state: BandState) -> tuple:
+    """Exact int32 view of a (possibly narrow) carry: u/v/x/y widened,
+    H reconstructed as base + Hrel with DEAD16-sentinel cells -> NEG."""
+    u = state.u.astype(jnp.int32)
+    v = state.v.astype(jnp.int32)
+    x = state.x.astype(jnp.int32)
+    y = state.y.astype(jnp.int32)
+    if state.H.dtype == jnp.int16:
+        H = jnp.where(state.H <= jnp.int16(DEAD16), NEG,
+                      state.base + state.H.astype(jnp.int32))
+    else:
+        H = state.H
+    return u, v, x, y, H
+
+
+def _narrow(H_new, u_new, v_new, x_new, y_new, cell_dtype: str):
+    """Re-narrow the freshly computed int32 planes for the carry.
+
+    Narrow mode: base = max live H this diagonal (there is always at
+    least one live cell while t <= n + m); live cells store H - base in
+    int16, clamped at DEAD16 + 1 as a belt-and-braces saturation floor —
+    `validate_narrow_cells` proves the clamp never binds. u/v/x/y are
+    stored int8 (range [0, M + 2(o+e)], boundary overrides included).
+    """
+    if cell_dtype != "narrow":
+        return H_new, u_new, v_new, x_new, y_new, jnp.int32(0)
+    live = H_new > DEAD_THRESHOLD
+    base = jnp.max(jnp.where(live, H_new, NEG))
+    rel = jnp.maximum(H_new - base, jnp.int32(DEAD16 + 1))
+    H16 = jnp.where(live, rel, jnp.int32(DEAD16)).astype(jnp.int16)
+    return (H16, u_new.astype(jnp.int8), v_new.astype(jnp.int8),
+            x_new.astype(jnp.int8), y_new.astype(jnp.int8), base)
 
 
 def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
-          mode: str, q_pad, r_pad, n, m, state: BandState, t):
-    """One wavefront move: decide direction, advance band, update Eq. (4)."""
+          mode: str, cell_dtype: str, q_pad, r_pad, n, m,
+          state: BandState, t):
+    """One wavefront move: decide direction, advance band, update Eq. (4).
+
+    The carry may be stored narrow (int8 diffs + int16 relative H); the
+    update itself always runs in exact int32 — widen in, narrow out.
+    """
     o, e = sc.gap_open, sc.gap_extend
     oe = jnp.int32(o + e)
     shift = jnp.int32(2 * (o + e))
     B = band
+    s_u, s_v, s_x, s_y, s_H = _widen(state)
 
     # ---- 1. Wavefront direction (paper §IV-B2 + feasibility clamps) ----
     lo = state.lo
@@ -160,7 +266,7 @@ def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
     must_right = lo >= n
     if adaptive:
         # Rightmost band cell = lane 0 (largest j); leftmost = lane B-1.
-        heur_right = state.H[0] > state.H[B - 1]
+        heur_right = s_H[0] > s_H[B - 1]
     else:
         # Fixed direction: steer the band centre toward the main diagonal
         # (the pre-defined scheme of Fig. 4(b), used by the Table V "No"
@@ -179,12 +285,12 @@ def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
     def pick_left(a, fill):
         return jnp.where(go_down, _shift_up(a, fill), a)
 
-    up_H = pick_up(state.H, NEG)
-    up_x = pick_up(state.x, jnp.int32(0))
-    up_v = pick_up(state.v, jnp.int32(0))
-    left_H = pick_left(state.H, NEG)
-    left_y = pick_left(state.y, jnp.int32(0))
-    left_u = pick_left(state.u, jnp.int32(0))
+    up_H = pick_up(s_H, NEG)
+    up_x = pick_up(s_x, jnp.int32(0))
+    up_v = pick_up(s_v, jnp.int32(0))
+    left_H = pick_left(s_H, NEG)
+    left_y = pick_left(s_y, jnp.int32(0))
+    left_u = pick_left(s_u, jnp.int32(0))
 
     up_valid = up_H > DEAD_THRESHOLD
     left_valid = left_H > DEAD_THRESHOLD
@@ -292,10 +398,13 @@ def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
     def keep(new, old):
         return jnp.where(active, new, old)
 
+    H_st, u_st, v_st, x_st, y_st, base_st = _narrow(
+        H_new, u_new, v_new, x_new, y_new, cell_dtype)
     new_state = BandState(
-        lo=keep(lo_new, state.lo), u=keep(u_new, state.u),
-        v=keep(v_new, state.v), x=keep(x_new, state.x),
-        y=keep(y_new, state.y), H=keep(H_new, state.H),
+        lo=keep(lo_new, state.lo), u=keep(u_st, state.u),
+        v=keep(v_st, state.v), x=keep(x_st, state.x),
+        y=keep(y_st, state.y), H=keep(H_st, state.H),
+        base=keep(base_st, state.base),
         score=score, final_lo=final_lo,
         best=best, best_i=best_i, best_j=best_j)
     ys = (code, keep(lo_new, state.lo)) if collect_tb else keep(lo_new, state.lo)
@@ -303,10 +412,12 @@ def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
 
 
 @functools.partial(jax.jit, static_argnames=("sc", "band", "adaptive",
-                                             "collect_tb", "mode", "t_max"))
+                                             "collect_tb", "mode", "t_max",
+                                             "cell_dtype"))
 def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
                  adaptive: bool = True, collect_tb: bool = True,
-                 mode: str = "global", t_max: int | None = None):
+                 mode: str = "global", t_max: int | None = None,
+                 cell_dtype: str = "int32"):
     """Align one (query, reference) pair with the adaptive banded
     parallelized DP.
 
@@ -324,6 +435,11 @@ def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
         t_max >= n + m for every pair in the (vmapped) batch; scores and
         CIGARs are invariant to any valid choice because the carry
         freezes past t = n + m. None = full padded sweep.
+      cell_dtype: "int32" (default) or "narrow" — carry the wavefront
+        state as int8 difference planes + int16 band-relative H (paper
+        §IV bit-width reduction). Bit-exact with int32 whenever
+        `validate_narrow_cells(sc, band)` accepts the config (callers
+        should invoke the guard; it is not repeated per trace here).
 
     Returns a dict with 'score' (int32), and when collect_tb: 'tb'
     ((T, ceil(B/2)) uint8 — 4-bit flags packed two lanes per byte, even
@@ -338,8 +454,8 @@ def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
     m = jnp.asarray(m, jnp.int32)
 
     step = functools.partial(_step, sc, band, adaptive, collect_tb, mode,
-                             q_pad, r_pad, n, m)
-    state, ys = jax.lax.scan(step, _init_state(band, mode),
+                             cell_dtype, q_pad, r_pad, n, m)
+    state, ys = jax.lax.scan(step, _init_state(band, mode, cell_dtype),
                              jnp.arange(1, T + 1, dtype=jnp.int32))
     out = {"score": state.score, "final_lo": state.final_lo,
            "best_score": state.best, "best_i": state.best_i,
@@ -353,11 +469,12 @@ def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
 
 def banded_align_batch(q_batch, r_batch, n_batch, m_batch, *, sc, band,
                        adaptive=True, collect_tb=True, mode="global",
-                       t_max: int | None = None):
+                       t_max: int | None = None,
+                       cell_dtype: str = "int32"):
     """Sequence-level parallelism: vmap over a padded batch."""
     fn = functools.partial(banded_align, sc=sc, band=band,
                            adaptive=adaptive, collect_tb=collect_tb,
-                           mode=mode, t_max=t_max)
+                           mode=mode, t_max=t_max, cell_dtype=cell_dtype)
     return jax.vmap(fn)(q_batch, r_batch, n_batch, m_batch)
 
 

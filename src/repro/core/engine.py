@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.core.backends import available_backends, get_backend, \
     resolve_backend
+from repro.core.banded import validate_narrow_cells
 from repro.core.batch import (DEFAULT_BAND_CAP, DEFAULT_BUCKET_EDGES,
                               BucketSpec, default_base_bandwidth,
                               enqueue_dispatch, finalize_dispatch, pad_group,
@@ -57,6 +58,13 @@ from repro.core.scoring import ScoringConfig, MINIMAP2, adaptive_bandwidth
 
 #: Result keys every backend returns for each pair (original read order).
 SCALAR_KEYS = ("score", "final_lo", "best_score", "best_i", "best_j")
+
+#: Dummy-row pad multiple for persistent dispatch groups. The pipelined
+#: path pads every group to its capacity slice (64 x num_shards) because
+#: each slice is a separate launch; the persistent megakernel has no
+#: per-group launch to amortise, so groups only pad to the kernel batch
+#: tile — a ragged tail group of 22 pairs costs 24 slots, not 64.
+PERSISTENT_PAD = 8
 
 
 @dataclasses.dataclass
@@ -129,6 +137,23 @@ class AlignmentEngine:
         of its members) instead of the full padded q_len + r_len.
         Results are bit-identical either way; False exists for the
         trimming-parity tests and benchmarks.
+      dispatch: "pipelined" (default) or "persistent". Pipelined is the
+        depth-1 lookahead loop: one backend launch per dispatch group
+        slice, host mediating group boundaries. Persistent hands ALL of
+        a request's groups to the backend's `run_persistent` in ONE
+        device program (DESIGN.md §10): per-group t_max/band become
+        device-side loop bounds, the RLE decode is fused behind the
+        compute, groups pad only to `PERSISTENT_PAD` instead of the
+        capacity slice, and the single host sync is the trimmed RLE
+        fetch at the end. Results are bit-identical (asserted by
+        tests/test_persistent_dispatch.py). Persistent requires
+        mesh=None and (with collect_tb) decode="device".
+      cell_dtype: "int32" (default) or "narrow" — backend band-state
+        storage precision (paper §IV bit-width reduction). Narrow keeps
+        int8 difference planes + int16 band-relative H; bit-exact with
+        int32 under the static guard `validate_narrow_cells(sc,
+        band_cap)`, which runs at construction and rejects scoring
+        configs whose worst case could overflow.
       decode: traceback decode stage for the ragged `align` path.
         "device" (default) fuses the lockstep walker after the compute —
         the packed tb plane never leaves the device and the host fetches
@@ -151,6 +176,8 @@ class AlignmentEngine:
     backend_opts: dict | None = None
     bucket_edges: tuple = DEFAULT_BUCKET_EDGES
     trim: bool = True
+    dispatch: str = "pipelined"
+    cell_dtype: str = "int32"
     decode: str = "device"
     mesh: object = None
     batch_axes: tuple | None = None
@@ -158,6 +185,22 @@ class AlignmentEngine:
     def __post_init__(self):
         self.backend = get_backend(self.backend,
                                    **(self.backend_opts or {}))
+        if self.dispatch not in ("pipelined", "persistent"):
+            raise ValueError(f"dispatch must be 'pipelined' or "
+                             f"'persistent', got {self.dispatch!r}")
+        if self.cell_dtype not in ("int32", "narrow"):
+            raise ValueError(f"cell_dtype must be 'int32' or 'narrow', "
+                             f"got {self.cell_dtype!r}")
+        if self.cell_dtype == "narrow":
+            # Static overflow guard: the band never exceeds band_cap, and
+            # the bound is monotonic in the band width, so checking the
+            # cap covers every dispatch this engine can plan.
+            validate_narrow_cells(self.sc, self.band_cap)
+        if self.dispatch == "persistent" and self.mesh is not None:
+            raise ValueError(
+                "dispatch='persistent' runs the whole request as one "
+                "single-device program and cannot shard over a mesh; use "
+                "the pipelined dispatch with mesh=")
         if self.mesh is not None and self.batch_axes is None:
             self.batch_axes = tuple(a for a in self.mesh.axis_names
                                     if a in ("pod", "data"))
@@ -206,7 +249,8 @@ class AlignmentEngine:
                 return self.backend.run(q, r, n, m, sc=self.sc, band=band,
                                         adaptive=self.adaptive,
                                         collect_tb=collect_tb, mode=mode,
-                                        t_max=t_max, decode=decode)
+                                        t_max=t_max, decode=decode,
+                                        cell_dtype=self.cell_dtype)
 
             fn = jax.jit(shard_map(local_align, mesh=self.mesh,
                                    in_specs=(spec, spec, spec, spec),
@@ -243,7 +287,8 @@ class AlignmentEngine:
         return self.backend.run(q_pad, r_pad, n, m, sc=self.sc, band=band,
                                 adaptive=self.adaptive,
                                 collect_tb=collect_tb, mode=mode,
-                                t_max=t_max, decode=decode)
+                                t_max=t_max, decode=decode,
+                                cell_dtype=self.cell_dtype)
 
     # ------------------------------------------------------------------
     # Group-at-a-time pipeline primitives (the service's driving API).
@@ -277,7 +322,8 @@ class AlignmentEngine:
             run = functools.partial(
                 self.backend.run, sc=self.sc, band=spec.band,
                 adaptive=self.adaptive, collect_tb=collect_tb,
-                mode=mode, t_max=t_max, decode=self.decode)
+                mode=mode, t_max=t_max, decode=self.decode,
+                cell_dtype=self.cell_dtype)
         outs = enqueue_dispatch(run, q_pad, r_pad, n, m,
                                 capacity=spec.capacity * self.num_shards)
         return PendingDispatch(spec=spec, n=n, m=m, outs=outs,
@@ -320,6 +366,9 @@ class AlignmentEngine:
         """
         if len(reads) != len(refs):
             raise ValueError("reads and refs must pair up")
+        if self.dispatch == "persistent":
+            return self._align_persistent(reads, refs, mode=mode,
+                                          collect_tb=collect_tb)
         N = len(reads)
         out = {k: np.zeros(N, np.int32) for k in SCALAR_KEYS}
         out["band"] = np.zeros(N, np.int32)
@@ -351,6 +400,70 @@ class AlignmentEngine:
             if collect_tb:
                 for pos, cig in zip(idx, merged["cigars"]):
                     cigars[pos] = cig
+        if collect_tb:
+            out["cigars"] = cigars
+        return out
+
+    def _align_persistent(self, reads, refs, *, mode: str,
+                          collect_tb: bool):
+        """The persistent-dispatch realisation of `align`: every planned
+        group goes to the backend's `run_persistent` in ONE device
+        program — no per-group launches, no host mediation between
+        groups, and (with collect_tb) exactly one host sync: the trimmed
+        RLE fetch over the whole request. Groups pad to `PERSISTENT_PAD`
+        rather than the capacity slice, so ragged tail groups stop
+        paying for empty dispatch slots. Output contract is identical to
+        the pipelined `align` (bit-exact, asserted by
+        tests/test_persistent_dispatch.py)."""
+        if collect_tb and self.decode != "device":
+            raise ValueError(
+                "dispatch='persistent' fuses the traceback decode "
+                "on-device; decode='host' exists only on the pipelined "
+                "path")
+        N = len(reads)
+        out = {k: np.zeros(N, np.int32) for k in SCALAR_KEYS}
+        out["band"] = np.zeros(N, np.int32)
+
+        groups = self.plan([len(x) for x in reads],
+                           [len(x) for x in refs])
+        batch = []
+        for g in groups:
+            idx = g.indices
+            t_max = g.spec.t_max if self.trim else None
+            q_pad, r_pad, n, m = pad_group(
+                [reads[i] for i in idx], [refs[i] for i in idx], g.spec,
+                pad_multiple=PERSISTENT_PAD)
+            _check_t_max(t_max, n, m)
+            batch.append((q_pad, r_pad, n, m, g.spec.band, t_max))
+        if not groups:
+            if collect_tb:
+                out["cigars"] = []
+            return out
+
+        merged = self.backend.run_persistent(
+            batch, sc=self.sc, adaptive=self.adaptive,
+            collect_tb=collect_tb, mode=mode, decode=self.decode,
+            cell_dtype=self.cell_dtype)
+
+        if collect_tb:
+            from repro.core.traceback_device import fetch_rle, rle_to_cigars
+            ops, runs, lens = fetch_rle(merged)
+        scalars = {k: np.asarray(merged[k]) for k in SCALAR_KEYS}
+        cigars: list = [None] * N
+        off = 0
+        for g, grp in zip(groups, batch):
+            idx = g.indices
+            n_real = len(idx)
+            for key in SCALAR_KEYS:
+                out[key][idx] = scalars[key][off:off + n_real]
+            out["band"][idx] = g.spec.band
+            if collect_tb:
+                cigs = rle_to_cigars(ops[off:off + n_real],
+                                     runs[off:off + n_real],
+                                     lens[off:off + n_real])
+                for pos, cig in zip(idx, cigs):
+                    cigars[pos] = cig
+            off += grp[0].shape[0]  # advance past this group's padded rows
         if collect_tb:
             out["cigars"] = cigars
         return out

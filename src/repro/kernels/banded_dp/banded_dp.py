@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.banded import pack_tb_lanes, packed_tb_width
+from repro.core.banded import DEAD16, pack_tb_lanes, packed_tb_width
 from repro.core.scoring import ScoringConfig
 
 NEG = -(1 << 28)   # plain ints: pallas kernels must not capture jax arrays
@@ -62,25 +62,31 @@ _SCORE, _FINAL_LO, _BEST, _BEST_I, _BEST_J = 0, 1, 2, 3, 4
 
 def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
                       adaptive: bool, bt: int, mode: str, collect_tb: bool,
+                      cell_dtype: str,
                       # refs
                       q_ref, r_ref, n_ref, m_ref,          # inputs
                       tb_ref, lo_out_ref, stats_ref,        # outputs
-                      u_s, v_s, x_s, y_s, H_s, lo_s):       # scratch
+                      u_s, v_s, x_s, y_s, H_s, lo_s, base_s):  # scratch
     o, e = sc.gap_open, sc.gap_extend
     oe = jnp.int32(o + e)
     shift = jnp.int32(2 * (o + e))
     B = band
+    narrow = cell_dtype == "narrow"
+    cdt = jnp.int8 if narrow else jnp.int32
+    hdt = jnp.int16 if narrow else jnp.int32
+    h_dead = DEAD16 if narrow else NEG
     tblk = pl.program_id(1)
 
     @pl.when(tblk == 0)
     def _init():
-        z = jnp.zeros((bt, B), jnp.int32)
+        z = jnp.zeros((bt, B), cdt)
         u_s[...] = z
         v_s[...] = z
         x_s[...] = z
         y_s[...] = z
-        H_s[...] = jnp.full((bt, B), NEG, jnp.int32).at[:, 0].set(0)
+        H_s[...] = jnp.full((bt, B), h_dead, hdt).at[:, 0].set(0)
         lo_s[...] = jnp.zeros((bt, 1), jnp.int32)
+        base_s[...] = jnp.zeros((bt, 1), jnp.int32)
         best0 = NEG if mode == "semiglobal" else 0
         stats0 = (jnp.zeros((bt, STATS_W), jnp.int32)
                   .at[:, _SCORE].set(NEG).at[:, _BEST].set(best0))
@@ -243,14 +249,36 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
             lo_out_ref[s] = lo[:, 0]
         return (u, v, x, y, H, lo, stats_new)
 
-    carry = (u_s[...], v_s[...], x_s[...], y_s[...], H_s[...], lo_s[...],
-             stats_ref[...])
+    # Widen the (possibly narrow) scratch carry to exact int32 registers
+    # for the step loop; narrow storage only exists at chunk boundaries,
+    # and the base+relative reconstruction is exact, so the loop values
+    # are bit-identical to the int32-scratch kernel.
+    if narrow:
+        H0 = jnp.where(H_s[...] <= jnp.int16(DEAD16), jnp.int32(NEG),
+                       base_s[...] + H_s[...].astype(jnp.int32))
+    else:
+        H0 = H_s[...]
+    carry = (u_s[...].astype(jnp.int32), v_s[...].astype(jnp.int32),
+             x_s[...].astype(jnp.int32), y_s[...].astype(jnp.int32),
+             H0, lo_s[...], stats_ref[...])
     u, v, x, y, H, lo, stats = jax.lax.fori_loop(0, chunk, step, carry)
-    u_s[...] = u
-    v_s[...] = v
-    x_s[...] = x
-    y_s[...] = y
-    H_s[...] = H
+    if narrow:
+        # Re-narrow for the chunk-boundary store: base = max live H per
+        # pair; live cells keep H - base (in [-spread_bound, 0], proven
+        # int16-safe by `validate_narrow_cells`; the DEAD16+1 floor is a
+        # never-binding saturation guard). Dead cells -> DEAD16 sentinel,
+        # diffs -> int8 (range [0, M + 2(o+e)]).
+        live = H > DEAD
+        base = jnp.max(jnp.where(live, H, NEG), axis=1, keepdims=True)
+        rel = jnp.maximum(H - base, jnp.int32(DEAD16 + 1))
+        H_s[...] = jnp.where(live, rel, jnp.int32(DEAD16)).astype(jnp.int16)
+        base_s[...] = base
+    else:
+        H_s[...] = H
+    u_s[...] = u.astype(cdt)
+    v_s[...] = v.astype(cdt)
+    x_s[...] = x.astype(cdt)
+    y_s[...] = y.astype(cdt)
     lo_s[...] = lo
     stats_ref[...] = stats
 
@@ -259,7 +287,8 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
                         adaptive: bool = True, collect_tb: bool = True,
                         mode: str = "global", batch_tile: int = 8,
                         chunk: int = 128, interpret: bool = True,
-                        t_max: int | None = None):
+                        t_max: int | None = None,
+                        cell_dtype: str = "int32"):
     """pl.pallas_call wrapper. See ops.banded_align_kernel_batch for the
     public jit'd API (padding, reshaping, traceback plumbing).
 
@@ -277,6 +306,12 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
         batch): the step-chunk grid shrinks to ceil(t_max / chunk)
         chunks, so a short-read batch in a long bucket stops sweeping
         dead diagonals. None = full Lq + Lr sweep.
+      cell_dtype: "int32" or "narrow". Narrow keeps the persistent VMEM
+        band state as int8 diffs + int16 band-relative H (+ one int32
+        base per pair) — the paper §IV bit-width reduction, quartering
+        scratch bytes per lane so wider bands fit the same VMEM budget.
+        The step loop still computes int32 in registers; bit-exact under
+        `core.banded.validate_narrow_cells` (callers enforce the guard).
     """
     N, Lq = q_pad.shape
     Lr = r_pad.shape[1]
@@ -289,7 +324,7 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
     n_chunks = T_pad // chunk
 
     kernel = functools.partial(_wavefront_kernel, sc, band, chunk,
-                               adaptive, bt, mode, collect_tb)
+                               adaptive, bt, mode, collect_tb, cell_dtype)
     grid = (nb, n_chunks)
 
     stats_shape = jax.ShapeDtypeStruct((nb, bt, STATS_W), jnp.int32)
@@ -315,13 +350,16 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
         pl.BlockSpec((1, bt, 1), lambda b, t: (b, 0, 0)),
         pl.BlockSpec((1, bt, 1), lambda b, t: (b, 0, 0)),
     ]
+    cdt = jnp.int8 if cell_dtype == "narrow" else jnp.int32
+    hdt = jnp.int16 if cell_dtype == "narrow" else jnp.int32
     scratch_shapes = [
-        pltpu.VMEM((bt, band), jnp.int32),  # u
-        pltpu.VMEM((bt, band), jnp.int32),  # v
-        pltpu.VMEM((bt, band), jnp.int32),  # x
-        pltpu.VMEM((bt, band), jnp.int32),  # y
-        pltpu.VMEM((bt, band), jnp.int32),  # H
+        pltpu.VMEM((bt, band), cdt),        # u
+        pltpu.VMEM((bt, band), cdt),        # v
+        pltpu.VMEM((bt, band), cdt),        # x
+        pltpu.VMEM((bt, band), cdt),        # y
+        pltpu.VMEM((bt, band), hdt),        # H (base-relative if narrow)
         pltpu.VMEM((bt, 1), jnp.int32),     # lo
+        pltpu.VMEM((bt, 1), jnp.int32),     # base (narrow H offset)
     ]
 
     def unsqueeze_kernel(q_r, r_r, n_r, m_r, *rest):

@@ -19,7 +19,8 @@ def banded_align_kernel_batch(q_pad, r_pad, n, m, *, sc: ScoringConfig,
                               collect_tb: bool = True, mode: str = "global",
                               batch_tile: int = 8, chunk: int = 128,
                               interpret: bool = True,
-                              t_max: int | None = None):
+                              t_max: int | None = None,
+                              cell_dtype: str = "int32"):
     """Kernel-path batched alignment.
 
     Pads the batch up to a multiple of batch_tile with dummy pairs, runs
@@ -49,5 +50,6 @@ def banded_align_kernel_batch(q_pad, r_pad, n, m, *, sc: ScoringConfig,
     out = banded_align_pallas(q_pad, r_pad, n, m, sc=sc, band=band,
                               adaptive=adaptive, collect_tb=collect_tb,
                               mode=mode, batch_tile=batch_tile,
-                              chunk=chunk, interpret=interpret, t_max=t_max)
+                              chunk=chunk, interpret=interpret, t_max=t_max,
+                              cell_dtype=cell_dtype)
     return {k: v[:N] for k, v in out.items()}

@@ -71,6 +71,19 @@ def _weight_bytes(cfg, active_only: bool, dtype_bytes: int = 2) -> float:
 #: event ends an M run and opens/closes a gap or mismatch context.
 ALIGN_DIVERGENCE = 0.05
 
+#: Fixed cost charged per device dispatch: launch + host mediation of one
+#: group boundary (python driver, argument staging, async-dispatch
+#: bookkeeping). O(100us) is the observed per-launch floor for jit'd JAX
+#: programs on CPU/TPU hosts; the pipelined scheduler pays it once per
+#: dispatch group, the persistent megakernel once per request.
+DISPATCH_OVERHEAD_S = 100e-6
+
+#: Band-state bytes per lane touched per wavefront step, by storage
+#: precision: int32 keeps u/v/x/y/H at 4 B each; narrow packs the four
+#: difference planes to int8 and H to a band-relative int16 (paper §IV
+#: bit-width reduction) — 4 x 1 + 2 bytes.
+CELL_STATE_BYTES = {"int32": 5 * 4, "narrow": 4 * 1 + 2}
+
 
 def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
     """Roofline for the rapidx-align cells (the paper's own workload).
@@ -86,6 +99,18 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
     + the per-pair length), not the packed plane — the plane never
     crosses the memory interface (DESIGN.md §5). Collectives are zero by
     construction (tile independence).
+
+    Dispatch-mode-aware launch charging: the record may carry
+    ``dispatch`` ("pipelined"/"persistent"), ``n_groups`` and
+    ``cell_dtype``. The pipelined scheduler pays `DISPATCH_OVERHEAD_S`
+    once per dispatch group; the persistent megakernel pays it once per
+    request (`core.engine` dispatch="persistent", DESIGN.md §10) —
+    `step_time_total_s` adds that charge to the overlap bound and the
+    pairs/s bound uses it. `cell_state_bytes_per_pair` reports the
+    band-state bytes the sweep touches under the chosen cell dtype
+    (VMEM-resident working set, NOT HBM traffic — it never leaves the
+    compute memory, which is exactly the narrow-cell win: 6 B/lane/step
+    vs 20 keeps wider bands in the same VMEM budget).
     """
     L = record["length"]
     B_band = record["band"]
@@ -109,6 +134,12 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
     rle_segments = 2 * ALIGN_DIVERGENCE * L + 1
     host_fetch_bytes = pairs_dev * (5 * rle_segments + 4)
     terms = roofline_terms(flops_dev, bytes_dev, 0.0, hw)
+    dispatch = record.get("dispatch", "pipelined")
+    n_groups = int(record.get("n_groups", 1))
+    launches = 1 if dispatch == "persistent" else n_groups
+    dispatch_overhead_s = launches * DISPATCH_OVERHEAD_S
+    step_time_total_s = terms["step_time_overlap_s"] + dispatch_overhead_s
+    cell_dtype = record.get("cell_dtype", "int32")
     return {
         "cell": f"rapidx-align/{record['shape']}/{record.get('mesh', '?')}",
         "chips": chips,
@@ -117,9 +148,15 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
         "collective_bytes_per_device": 0.0,
         "host_fetch_bytes_per_device": host_fetch_bytes,
         "tb_plane_bytes_per_pair": tb_bytes,
+        "dispatch": dispatch,
+        "launches": launches,
+        "dispatch_overhead_s": dispatch_overhead_s,
+        "step_time_total_s": step_time_total_s,
+        "cell_state_bytes_per_pair":
+            2 * L * B_band * CELL_STATE_BYTES[cell_dtype],
         **terms,
         "pairs_per_s_per_chip_bound":
-            1.0 / max(terms["step_time_overlap_s"] / pairs_dev, 1e-30),
+            1.0 / max(step_time_total_s / pairs_dev, 1e-30),
     }
 
 

@@ -1,0 +1,165 @@
+"""Narrow-cell (int8/int16) band-state storage (paper §IV bit-width
+reduction).
+
+Acceptance: cell_dtype="narrow" is bit-exact with the int32 oracle —
+scores, traceback planes and decoded CIGARs — on both backends, at the
+default band cap with worst-case inputs (all-mismatch pairs and large
+indels that drag the band along a boundary, where the in-band score
+spread is widest); and scoring configs whose worst case could overflow
+the narrow storage are rejected up front by the static guard with a
+clear error, at both the validator and the engine constructor.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import AlignmentEngine, MINIMAP2
+from repro.core.backends import get_backend
+from repro.core.banded import (INT8_DIFF_LIMIT, INT16_SPREAD_LIMIT,
+                               banded_align_batch, narrow_spread_bound,
+                               validate_narrow_cells)
+from repro.core.batch import DEFAULT_BAND_CAP
+from repro.core.scoring import BWA_MEM, EDIT_DISTANCE, ScoringConfig
+
+PALLAS_OPTS = {"batch_tile": 4, "chunk": 32}
+BACKENDS = [("reference", {}), ("pallas", PALLAS_OPTS)]
+
+
+def _worst_case_pairs(L, seed=0):
+    """Pairs engineered to maximise the live in-band spread: an
+    all-mismatch pair (every cell pays the substitution), a long
+    leading deletion (the band hugs the j axis while lane scores
+    diverge), its insertion mirror, and a same-letter pair (degenerate
+    ties). Plus one ordinary mutated pair as a control."""
+    rng = np.random.default_rng(seed)
+    q0 = rng.integers(0, 4, L).astype(np.int8)
+    pairs = [
+        (q0, (q0 + 1 + rng.integers(0, 3, L)).astype(np.int8) % 4),
+        (q0, np.concatenate([rng.integers(0, 4, L // 2).astype(np.int8),
+                             q0])),
+        (np.concatenate([rng.integers(0, 4, L // 2).astype(np.int8), q0]),
+         q0),
+        (np.zeros(L, np.int8), np.zeros(L, np.int8)),
+    ]
+    r0 = q0.copy()
+    mask = rng.random(L) < 0.1
+    r0[mask] = rng.integers(0, 4, mask.sum())
+    pairs.append((q0, r0))
+    return pairs
+
+
+def _pad(pairs):
+    n = np.array([len(q) for q, _ in pairs], np.int32)
+    m = np.array([len(r) for _, r in pairs], np.int32)
+    Lq, Lr = int(n.max()), int(m.max())
+    q_pad = np.full((len(pairs), Lq), 4, np.int8)
+    r_pad = np.full((len(pairs), Lr), 4, np.int8)
+    for k, (q, r) in enumerate(pairs):
+        q_pad[k, :len(q)] = q
+        r_pad[k, :len(r)] = r
+    return q_pad, r_pad, n, m
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness with the int32 oracle.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["global", "semiglobal"])
+def test_narrow_bitexact_reference_band_cap_worst_case(mode):
+    """Worst-case spread at the default band cap: the widest band any
+    engine dispatch can plan, driven by all-mismatch / long-indel pairs.
+    MINIMAP2 at band 100 has spread bound 100 * (2 + 4 + 12) = 1800 —
+    legal but 11% of the int16 budget; results must be bit-identical,
+    traceback plane included."""
+    q, r, n, m = _pad(_worst_case_pairs(120))
+    validate_narrow_cells(MINIMAP2, DEFAULT_BAND_CAP)
+    kw = dict(sc=MINIMAP2, band=DEFAULT_BAND_CAP, mode=mode,
+              collect_tb=True)
+    a = banded_align_batch(q, r, n, m, cell_dtype="int32", **kw)
+    b = banded_align_batch(q, r, n, m, cell_dtype="narrow", **kw)
+    for k in a:
+        assert (np.asarray(a[k]) == np.asarray(b[k])).all(), k
+
+
+@pytest.mark.parametrize("sc", [MINIMAP2, BWA_MEM, EDIT_DISTANCE],
+                         ids=["minimap2", "bwa_mem", "edit"])
+@pytest.mark.parametrize("name,opts", BACKENDS)
+def test_narrow_bitexact_backends_with_cigars(name, opts, sc):
+    """Both backends, every preset the guard admits: device-decoded RLE
+    CIGARs and all scalar results identical between cell dtypes. Odd
+    band width exercises the half-filled last packed-tb byte."""
+    q, r, n, m = _pad(_worst_case_pairs(48, seed=3))
+    be = get_backend(name, **opts)
+    outs = {}
+    for cd in ("int32", "narrow"):
+        o = be.run(jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
+                   jnp.asarray(m), sc=sc, band=17, collect_tb=True,
+                   decode="device", cell_dtype=cd)
+        outs[cd] = {k: np.asarray(v) for k, v in o.items()}
+    for k in outs["int32"]:
+        assert (outs["int32"][k] == outs["narrow"][k]).all(), k
+
+
+def test_narrow_engine_ragged_pipeline():
+    """cell_dtype plumbs through the ragged engine scheduler: identical
+    scores and CIGARs to the int32 engine."""
+    rng = np.random.default_rng(7)
+    reads, refs = [], []
+    for L in [30, 75, 160, 41, 220, 63]:
+        q = rng.integers(0, 4, L).astype(np.int8)
+        r = q.copy()
+        mask = rng.random(L) < 0.12
+        r[mask] = rng.integers(0, 4, mask.sum())
+        reads.append(q)
+        refs.append(r[:-3] if L > 50 else r)
+    a = AlignmentEngine(backend="reference").align(
+        reads, refs, collect_tb=True)
+    b = AlignmentEngine(backend="reference", cell_dtype="narrow").align(
+        reads, refs, collect_tb=True)
+    for k in ("score", "final_lo", "best_score", "best_i", "best_j"):
+        assert (a[k] == b[k]).all(), k
+    assert a["cigars"] == b["cigars"]
+
+
+# ---------------------------------------------------------------------------
+# The static overflow guard.
+# ---------------------------------------------------------------------------
+
+def test_guard_bounds_are_documented_limits():
+    assert INT8_DIFF_LIMIT == 127
+    assert INT16_SPREAD_LIMIT == (1 << 14) - 1
+    # MINIMAP2 at the default cap sits well inside the budget.
+    assert narrow_spread_bound(MINIMAP2, DEFAULT_BAND_CAP) == 1800
+
+
+def test_guard_rejects_int8_diff_overflow():
+    """M + 2(o+e) > 127 would overflow the int8 difference planes."""
+    sc = ScoringConfig(match=30, mismatch=6, gap_open=50, gap_extend=4)
+    assert sc.match + sc.shift > INT8_DIFF_LIMIT
+    with pytest.raises(ValueError, match="int8"):
+        validate_narrow_cells(sc, 10)
+
+
+def test_guard_rejects_int16_spread_overflow():
+    """band * (match + mismatch + 2(o+e)) > 16383 would overflow the
+    int16 band-relative H plane at the widest planned band."""
+    sc = ScoringConfig(match=80, mismatch=80, gap_open=2, gap_extend=2)
+    validate_narrow_cells(sc, 10)  # narrow band: fine
+    with pytest.raises(ValueError, match="int16"):
+        validate_narrow_cells(sc, 100)
+
+
+def test_engine_constructor_runs_guard():
+    sc = ScoringConfig(match=80, mismatch=80, gap_open=2, gap_extend=2)
+    with pytest.raises(ValueError, match="int16"):
+        AlignmentEngine(backend="reference", sc=sc, cell_dtype="narrow",
+                        band_cap=100)
+    # Same config passes with a band cap inside the bound.
+    AlignmentEngine(backend="reference", sc=sc, cell_dtype="narrow",
+                    band_cap=10)
+
+
+def test_engine_rejects_unknown_cell_dtype():
+    with pytest.raises(ValueError, match="cell_dtype"):
+        AlignmentEngine(backend="reference", cell_dtype="int16")

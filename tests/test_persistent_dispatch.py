@@ -1,0 +1,190 @@
+"""Persistent on-device dispatch (DESIGN.md §10).
+
+Acceptance: `AlignmentEngine(dispatch="persistent")` is bit-exact with
+the pipelined scheduler — scores AND device-decoded CIGARs — on both
+backends across ragged multi-group requests (several length classes,
+ragged group sizes, both alignment modes, int32 and narrow cells); the
+backend `run_persistent` contract merges per-group results group-major
+and matches per-group `run` outputs; and the contract's rejection paths
+(decode="host", mesh) fail loudly.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import AlignmentEngine, MINIMAP2
+from repro.core.backends import get_backend
+from repro.core.engine import PERSISTENT_PAD, SCALAR_KEYS
+
+PALLAS_OPTS = {"batch_tile": 4, "chunk": 32}
+BACKENDS = [("reference", {}), ("pallas", PALLAS_OPTS)]
+
+
+def _ragged_request(seed=0):
+    """Three length classes with ragged group sizes (13 / 9 / 3 pairs),
+    mutations and indels — small geometries so the pallas interpret-mode
+    grid stays fast."""
+    rng = np.random.default_rng(seed)
+    lens = ([int(x) for x in rng.integers(20, 90, 13)]
+            + [int(x) for x in rng.integers(150, 260, 9)]
+            + [40, 44, 52])
+    rng.shuffle(lens)
+    reads, refs = [], []
+    for L in lens:
+        q = rng.integers(0, 4, L).astype(np.int8)
+        r = q.copy()
+        mask = rng.random(L) < 0.1
+        r[mask] = rng.integers(0, 4, mask.sum())
+        if L > 30:
+            r = np.concatenate([r[:L // 3], r[L // 3 + 3:]])
+        reads.append(q)
+        refs.append(r)
+    return reads, refs
+
+
+def _engines(name, opts, **kw):
+    pipelined = AlignmentEngine(backend=name, backend_opts=opts, **kw)
+    persistent = AlignmentEngine(backend=name, backend_opts=opts,
+                                 dispatch="persistent", **kw)
+    return pipelined, persistent
+
+
+# ---------------------------------------------------------------------------
+# Engine-level bit-exactness with the pipelined scheduler.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["global", "semiglobal"])
+@pytest.mark.parametrize("name,opts", BACKENDS)
+def test_persistent_matches_pipelined(name, opts, mode):
+    reads, refs = _ragged_request()
+    pipelined, persistent = _engines(name, opts)
+    a = pipelined.align(reads, refs, mode=mode, collect_tb=True)
+    b = persistent.align(reads, refs, mode=mode, collect_tb=True)
+    for k in SCALAR_KEYS + ("band",):
+        assert (a[k] == b[k]).all(), k
+    assert a["cigars"] == b["cigars"]
+
+
+@pytest.mark.parametrize("name,opts", BACKENDS)
+def test_persistent_narrow_cells_combo(name, opts):
+    """The two tentpole halves composed: persistent dispatch running on
+    narrow band-state storage, still bit-exact."""
+    reads, refs = _ragged_request(seed=5)
+    pipelined, persistent = _engines(name, opts, cell_dtype="narrow")
+    a = pipelined.align(reads, refs, collect_tb=True)
+    b = persistent.align(reads, refs, collect_tb=True)
+    for k in SCALAR_KEYS:
+        assert (a[k] == b[k]).all(), k
+    assert a["cigars"] == b["cigars"]
+
+
+def test_persistent_scores_only_path():
+    reads, refs = _ragged_request(seed=9)
+    pipelined, persistent = _engines("reference", {})
+    a = pipelined.align(reads, refs, collect_tb=False)
+    b = persistent.align(reads, refs, collect_tb=False)
+    for k in SCALAR_KEYS:
+        assert (a[k] == b[k]).all(), k
+    assert "cigars" not in b
+
+
+def test_persistent_empty_request():
+    out = AlignmentEngine(backend="reference",
+                          dispatch="persistent").align([], [],
+                                                       collect_tb=True)
+    assert out["score"].shape == (0,) and out["cigars"] == []
+
+
+# ---------------------------------------------------------------------------
+# Backend run_persistent contract.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,opts", BACKENDS)
+def test_run_persistent_merges_group_major(name, opts):
+    """Merged output rows equal per-group `run` outputs laid end to end,
+    RLE planes zero-padded to the widest group."""
+    rng = np.random.default_rng(2)
+
+    def group(n_pairs, L, band, t_max, n_pad):
+        q = np.full((n_pad, L), 4, np.int8)
+        r = np.full((n_pad, L), 4, np.int8)
+        n = np.ones(n_pad, np.int32)
+        m = np.ones(n_pad, np.int32)
+        for k in range(n_pairs):
+            qk = rng.integers(0, 4, L).astype(np.int8)
+            rk = qk.copy()
+            mask = rng.random(L) < 0.1
+            rk[mask] = rng.integers(0, 4, mask.sum())
+            q[k], r[k], n[k], m[k] = qk, rk, L, L
+        return (q, r, n, m, band, t_max)
+
+    groups = [group(3, 60, 11, 128, 8), group(7, 100, 17, 224, 8),
+              group(2, 30, 8, 64, 4)]
+    be = get_backend(name, **opts)
+    merged = be.run_persistent(groups, sc=MINIMAP2, collect_tb=True)
+    merged = {k: np.asarray(v) for k, v in merged.items()}
+    assert merged["score"].shape[0] == sum(g[0].shape[0] for g in groups)
+    off = 0
+    for (q, r, n, m, band, t_max) in groups:
+        o = be.run(jnp.asarray(q), jnp.asarray(r), jnp.asarray(n),
+                   jnp.asarray(m), sc=MINIMAP2, band=band, t_max=t_max,
+                   collect_tb=True, decode="device")
+        n_pad = q.shape[0]
+        for k in SCALAR_KEYS + ("cig_len",):
+            assert (merged[k][off:off + n_pad] == np.asarray(o[k])).all(), k
+        for k in ("cig_ops", "cig_runs"):
+            exp = np.asarray(o[k])
+            got = merged[k][off:off + n_pad]
+            assert (got[:, :exp.shape[1]] == exp).all(), k
+            assert (got[:, exp.shape[1]:] == 0).all(), k
+        off += n_pad
+
+
+def test_run_persistent_rejects_host_decode():
+    be = get_backend("reference")
+    q = np.full((4, 8), 0, np.int8)
+    grp = (q, q, np.full(4, 8, np.int32), np.full(4, 8, np.int32), 5, 16)
+    with pytest.raises(ValueError, match="decode"):
+        be.run_persistent([grp], sc=MINIMAP2, collect_tb=True,
+                          decode="host")
+
+
+# ---------------------------------------------------------------------------
+# Engine config rejection paths + padding economics.
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_persistent_with_host_decode():
+    eng = AlignmentEngine(backend="reference", dispatch="persistent",
+                          decode="host")
+    reads, refs = _ragged_request(seed=3)
+    with pytest.raises(ValueError, match="persistent"):
+        eng.align(reads, refs, collect_tb=True)
+    # Without tracebacks there is no decode stage to reject.
+    eng.align(reads[:4], refs[:4], collect_tb=False)
+
+
+def test_engine_rejects_persistent_with_mesh():
+    class FakeMesh:
+        axis_names = ("data",)
+        shape = {"data": 1}
+    with pytest.raises(ValueError, match="mesh"):
+        AlignmentEngine(backend="reference", dispatch="persistent",
+                        mesh=FakeMesh())
+
+
+def test_engine_rejects_unknown_dispatch():
+    with pytest.raises(ValueError, match="dispatch"):
+        AlignmentEngine(backend="reference", dispatch="fused")
+
+
+def test_persistent_pads_to_tile_not_capacity():
+    """The structural win: a ragged group pads to PERSISTENT_PAD slots,
+    not the pipelined capacity slice."""
+    eng = AlignmentEngine(backend="reference", dispatch="persistent",
+                          capacity=64)
+    lens = [50] * 13
+    groups = eng.plan(lens, lens)
+    assert len(groups) == 1
+    n_pad = -(-13 // PERSISTENT_PAD) * PERSISTENT_PAD
+    assert n_pad == 16 < 64  # vs capacity padding

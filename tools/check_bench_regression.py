@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Fail CI when an engine benchmark row regresses vs the committed
+baseline.
+
+Compares a freshly generated BENCH_engine.json against the previous
+commit's checked-in copy (``git show HEAD:BENCH_engine.json`` by
+default) and exits non-zero if any ``engine/*`` row's ``us_per_call``
+grew by more than the threshold (default 25% — wide enough to absorb
+shared-runner noise on the host-side pipeline timings, tight enough to
+catch a real scheduling or kernel regression). Rows are matched on
+(name, backend); rows present only on one side are reported but never
+fail the check (new benchmarks land with their first baseline, retired
+ones leave with their last).
+
+Usage:
+    python tools/check_bench_regression.py NEW.json [--baseline REF]
+        [--threshold 0.25] [--prefix engine/]
+
+``--baseline`` is a git ref:path spec (default HEAD:BENCH_engine.json)
+or a plain file path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+
+def load_rows(spec: str) -> list[dict]:
+    """Load a benchmark JSON from a file path or a git ref:path spec."""
+    try:
+        with open(spec) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        pass
+    out = subprocess.run(["git", "show", spec], capture_output=True,
+                         text=True)
+    if out.returncode != 0:
+        raise SystemExit(
+            f"cannot load baseline {spec!r}: {out.stderr.strip()}")
+    return json.loads(out.stdout)
+
+
+def index(rows: list[dict], prefix: str) -> dict:
+    return {(r["name"], r.get("backend")): float(r["us_per_call"])
+            for r in rows if r["name"].startswith(prefix)}
+
+
+def check(new_rows: list[dict], base_rows: list[dict], *,
+          threshold: float, prefix: str) -> int:
+    new = index(new_rows, prefix)
+    base = index(base_rows, prefix)
+    failures = []
+    for key in sorted(new.keys() | base.keys(), key=str):
+        name = f"{key[0]} [{key[1]}]"
+        if key not in base:
+            print(f"NEW      {name}: {new[key]:.2f} us (no baseline)")
+            continue
+        if key not in new:
+            print(f"RETIRED  {name}: baseline {base[key]:.2f} us")
+            continue
+        ratio = new[key] / base[key] if base[key] else 1.0
+        status = "FAIL" if ratio > 1.0 + threshold else "ok"
+        print(f"{status:8} {name}: {base[key]:.2f} -> {new[key]:.2f} us "
+              f"({(ratio - 1) * 100:+.1f}%)")
+        if status == "FAIL":
+            failures.append(name)
+    if failures:
+        print(f"\n{len(failures)} row(s) regressed more than "
+              f"{threshold * 100:.0f}%: {', '.join(failures)}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="freshly generated benchmark JSON")
+    ap.add_argument("--baseline", default="HEAD:BENCH_engine.json",
+                    help="baseline: file path or git ref:path spec")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed relative us_per_call growth")
+    ap.add_argument("--prefix", default="engine/",
+                    help="row-name prefix under the gate")
+    args = ap.parse_args()
+    return check(load_rows(args.new), load_rows(args.baseline),
+                 threshold=args.threshold, prefix=args.prefix)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
