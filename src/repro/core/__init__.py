@@ -15,8 +15,8 @@ from repro.core.traceback_device import (decode_packed_tb,
                                          device_decode_result, fetch_rle,
                                          rle_to_cigars)
 from repro.core.batch import (DEFAULT_BAND_CAP, AlignmentBatch, BucketSpec,
-                              DispatchGroup, align_batch, make_bucket,
-                              plan_buckets, trimmed_sweep)
+                              DispatchGroup, align_batch, length_class,
+                              make_bucket, plan_buckets, trimmed_sweep)
 from repro.core.edit_distance import (edit_distance, edit_distance_batch,
                                       levenshtein_reference)
 from repro.core.backends import (available_backends, get_backend,

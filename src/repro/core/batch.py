@@ -69,6 +69,15 @@ def _round_up(x: int, edges=DEFAULT_BUCKET_EDGES) -> int:
     return int(2 ** np.ceil(np.log2(max(x, 1))))
 
 
+def length_class(q_len: int, r_len: int,
+                 edges=DEFAULT_BUCKET_EDGES) -> int:
+    """The bucket-edge length class one (read, ref) pair falls into —
+    the same classing `plan_buckets` applies, exposed so callers that
+    see requests one at a time (the serving layer's per-class flush
+    controllers) can pre-classify without planning."""
+    return _round_up(int(max(q_len, r_len)), edges)
+
+
 def default_base_bandwidth(L: int, base_bandwidth: int | None = None) -> int:
     """Base bandwidth w for a length class (§VI-B: 10 short / 30 long),
     unless the caller pins one. Shared policy of make_bucket,
@@ -214,7 +223,7 @@ def enqueue_dispatch(run, q_pad, r_pad, n, m, *, capacity: int):
 
 def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
                       collect_tb: bool = False, mode: str = "global",
-                      decode: str = "device"):
+                      decode: str = "device", stats: dict | None = None):
     """Materialise an enqueued group: merge slices to numpy (this blocks
     only on *this* group's device work), strip dummy padding down to
     `num_real`, and — when collect_tb — produce the group's CIGARs.
@@ -228,33 +237,49 @@ def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
     decode="host" (oracle / CPU fallback): fetch the packed
     (k, T, ceil(B/2)) flag plane and decode every CIGAR at once with the
     vectorised `traceback_banded_batch` (semiglobal paths start from the
-    tracked best cell)."""
+    tracked best cell).
+
+    When `stats` is given, `stats["fetched_bytes"]` is set to the bytes
+    this call really materialised device->host — counted at the fetch
+    (padded slice rows included, before dummy stripping), so a metrics
+    layer accumulating it per flush sees the true fetch traffic rather
+    than the stripped result size."""
+    fetched = 0
+
+    def fetch(x) -> np.ndarray:
+        nonlocal fetched
+        arr = np.asarray(x)
+        fetched += arr.nbytes
+        return arr
+
     if collect_tb and decode == "device":
         from repro.core.traceback_device import rle_to_cigars
 
         # Trim the fetch across slices: cig_len is a tiny (k,) fetch and
         # bounds the device-side column slice of the op/run planes.
-        lens = [np.asarray(o["cig_len"]) for o in outs]
+        lens = [fetch(o["cig_len"]) for o in outs]
         k_used = max(1, *(int(l.max(initial=0)) for l in lens))
         merged = {}
         for key in outs[0]:
             if key in ("cig_ops", "cig_runs"):
                 merged[key] = np.concatenate(
-                    [np.asarray(o[key][:, :k_used]) for o in outs]
+                    [fetch(o[key][:, :k_used]) for o in outs]
                 )[:num_real]
             elif key == "cig_len":
                 merged[key] = np.concatenate(lens)[:num_real]
             else:
                 merged[key] = np.concatenate(
-                    [np.asarray(o[key]) for o in outs])[:num_real]
+                    [fetch(o[key]) for o in outs])[:num_real]
         merged["cigars"] = rle_to_cigars(merged["cig_ops"],
                                          merged["cig_runs"],
                                          merged["cig_len"])
+        if stats is not None:
+            stats["fetched_bytes"] = fetched
         return merged
     merged = {}
     for key in outs[0]:
         merged[key] = np.concatenate(
-            [np.asarray(o[key]) for o in outs])[:num_real]
+            [fetch(o[key]) for o in outs])[:num_real]
     if collect_tb:
         if mode == "semiglobal":
             starts = np.stack([merged["best_i"], merged["best_j"]], axis=1)
@@ -263,6 +288,8 @@ def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
         merged["cigars"] = banded.traceback_banded_batch(
             merged["tb"], merged["los"], n[:num_real], m[:num_real],
             band, starts=starts)
+    if stats is not None:
+        stats["fetched_bytes"] = fetched
     return merged
 
 

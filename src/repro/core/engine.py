@@ -92,6 +92,72 @@ class PendingDispatch:
         """Padded dispatch slots (N_pad) — the fill-ratio denominator."""
         return int(self.n.shape[0])
 
+    @property
+    def signature(self) -> tuple:
+        """The dispatch signature this group compiled under — one XLA
+        program per distinct value (the key a depth autotuner or a
+        warmup pass works in)."""
+        return (self.spec.q_len, self.spec.r_len, self.spec.band,
+                self.spec.t_max, self.mode, self.collect_tb)
+
+
+@dataclasses.dataclass
+class PendingPersistent:
+    """One enqueued persistent-dispatch request (ALL of its groups in a
+    single device program; see `AlignmentEngine.enqueue_persistent`).
+
+    The same two-phase contract as `PendingDispatch`, at request
+    granularity: between enqueue and finalize the merged result buffers
+    live on the device, and `finalize_persistent` is the single host
+    sync (the trimmed RLE fetch + scalar fetch)."""
+    groups: list         # planned DispatchGroups (caller-order indices)
+    batch: list          # per-group (q_pad, r_pad, n, m, band, t_max)
+    outs: dict           # run_persistent's merged device result
+    num_real: int        # request pairs before dummy padding
+    collect_tb: bool
+    mode: str
+
+    @property
+    def num_slots(self) -> int:
+        """Padded rows across all groups — the fill-ratio denominator."""
+        return sum(int(grp[0].shape[0]) for grp in self.batch)
+
+    @property
+    def signature(self) -> tuple:
+        """The persistent program's compile key: the stacked group
+        geometry (see PallasBackend.run_persistent's cache)."""
+        return ("persistent",) + tuple(
+            (int(grp[0].shape[0]), int(grp[0].shape[1]),
+             int(grp[1].shape[1]), int(grp[4]), grp[5])
+            for grp in self.batch)
+
+
+def _enable_compilation_cache(cache_dir: str) -> None:
+    """Point JAX's persistent compilation cache at `cache_dir` and make
+    every dispatch-signature program eligible for it (the default
+    thresholds skip sub-second compiles — exactly the many small
+    per-signature programs a serving replica pays at traffic time).
+    Flags that this JAX version does not know are skipped."""
+    import jax
+
+    for flag, value in (("jax_compilation_cache_dir", cache_dir),
+                        ("jax_persistent_cache_min_compile_time_secs", 0.0),
+                        ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(flag, value)
+        except (AttributeError, ValueError):  # older/newer jax: best effort
+            pass
+    try:
+        # The cache handle is initialised once per process, on the first
+        # compile — which may have happened before this engine existed
+        # (with caching then silently off). Re-initialise it against the
+        # directory just configured.
+        from jax._src import compilation_cache
+
+        compilation_cache.reset_cache()
+    except Exception:  # noqa: BLE001 — private API: best effort only
+        pass
+
 
 def _check_t_max(t_max, n, m) -> None:
     """Reject a trimmed sweep shorter than some pair's true n + m — the
@@ -165,6 +231,15 @@ class AlignmentEngine:
         parallelism, Fig. 6(a)).
       batch_axes: mesh axes to shard over; None = every axis named
         "pod"/"data" in the mesh (alignment never uses "model").
+      compilation_cache_dir: when set, wire JAX's persistent
+        compilation cache to this directory (and drop the min-compile-
+        time / min-entry-size persistence thresholds so the dispatch
+        programs always persist). A replica restarted against a warm
+        cache deserialises its dispatch signatures instead of
+        recompiling them — pair with `warmup()` so the deserialisation
+        happens before traffic arrives. The flag is process-global in
+        JAX; constructing two engines with different directories moves
+        the cache for both.
     """
 
     backend: object = "auto"
@@ -181,8 +256,11 @@ class AlignmentEngine:
     decode: str = "device"
     mesh: object = None
     batch_axes: tuple | None = None
+    compilation_cache_dir: str | None = None
 
     def __post_init__(self):
+        if self.compilation_cache_dir is not None:
+            _enable_compilation_cache(self.compilation_cache_dir)
         self.backend = get_backend(self.backend,
                                    **(self.backend_opts or {}))
         if self.dispatch not in ("pipelined", "persistent"):
@@ -330,15 +408,137 @@ class AlignmentEngine:
                                num_real=len(reads), collect_tb=collect_tb,
                                mode=mode)
 
-    def finalize_group(self, pending: PendingDispatch) -> dict:
+    def finalize_group(self, pending: PendingDispatch, *,
+                       stats: dict | None = None) -> dict:
         """Materialise an enqueued group: blocks only on *that* group's
         device work, strips dummy padding, and (with collect_tb) joins
-        its CIGARs per the engine's decode stage."""
+        its CIGARs per the engine's decode stage. With `stats`, reports
+        the bytes this fetch really materialised
+        (`stats["fetched_bytes"]`, padded rows included)."""
         return finalize_dispatch(pending.outs, pending.n, pending.m,
                                  band=pending.spec.band,
                                  num_real=pending.num_real,
                                  collect_tb=pending.collect_tb,
-                                 mode=pending.mode, decode=self.decode)
+                                 mode=pending.mode, decode=self.decode,
+                                 stats=stats)
+
+    # ------------------------------------------------------------------
+    # Persistent-dispatch pipeline primitives (request granularity).
+    # ------------------------------------------------------------------
+    def enqueue_persistent(self, reads, refs, *, mode: str = "global",
+                           collect_tb: bool = False) -> PendingPersistent:
+        """Plan a whole ragged request and enqueue ALL of its groups as
+        ONE device program (`run_persistent`, DESIGN.md §10) — no host
+        sync. The `PendingPersistent` handle goes to
+        `finalize_persistent`; a caller interleaving several handles
+        pipelines whole requests the way `enqueue_group` pipelines
+        groups (the streaming service does exactly this when its engine
+        runs `dispatch="persistent"`)."""
+        if self.dispatch != "persistent":
+            raise ValueError("enqueue_persistent requires AlignmentEngine("
+                             "dispatch='persistent')")
+        if collect_tb and self.decode != "device":
+            raise ValueError(
+                "dispatch='persistent' fuses the traceback decode "
+                "on-device; decode='host' exists only on the pipelined "
+                "path")
+        if not len(reads):
+            raise ValueError("enqueue_persistent needs at least one pair")
+        groups = self.plan([len(x) for x in reads],
+                           [len(x) for x in refs])
+        batch = []
+        for g in groups:
+            idx = g.indices
+            t_max = g.spec.t_max if self.trim else None
+            q_pad, r_pad, n, m = pad_group(
+                [reads[i] for i in idx], [refs[i] for i in idx], g.spec,
+                pad_multiple=PERSISTENT_PAD)
+            _check_t_max(t_max, n, m)
+            batch.append((q_pad, r_pad, n, m, g.spec.band, t_max))
+        outs = self.backend.run_persistent(
+            batch, sc=self.sc, adaptive=self.adaptive,
+            collect_tb=collect_tb, mode=mode, decode=self.decode,
+            cell_dtype=self.cell_dtype)
+        return PendingPersistent(groups=groups, batch=batch, outs=outs,
+                                 num_real=len(reads),
+                                 collect_tb=collect_tb, mode=mode)
+
+    def finalize_persistent(self, pending: PendingPersistent, *,
+                            stats: dict | None = None) -> dict:
+        """Materialise a persistent request — the single host sync of
+        the persistent dispatch path: fetch the scalars (and, with
+        collect_tb, the trimmed RLE arrays), strip the per-group dummy
+        padding, and scatter back to the caller's original pair order.
+        Returns (N,) arrays for the SCALAR_KEYS plus 'band', and
+        'cigars' when tracebacks were collected. With `stats`, reports
+        `stats["fetched_bytes"]` (padded rows included)."""
+        fetched = 0
+
+        def fetch(x) -> np.ndarray:
+            nonlocal fetched
+            arr = np.asarray(x)
+            fetched += arr.nbytes
+            return arr
+
+        N = pending.num_real
+        out = {k: np.zeros(N, np.int32) for k in SCALAR_KEYS}
+        out["band"] = np.zeros(N, np.int32)
+        merged = pending.outs
+        if pending.collect_tb:
+            from repro.core.traceback_device import rle_to_cigars
+            lens = fetch(merged["cig_len"])
+            k_used = max(int(lens.max(initial=0)), 1)
+            ops = fetch(merged["cig_ops"][:, :k_used])
+            runs = fetch(merged["cig_runs"][:, :k_used])
+        scalars = {k: fetch(merged[k]) for k in SCALAR_KEYS}
+        cigars: list = [None] * N
+        off = 0
+        for g, grp in zip(pending.groups, pending.batch):
+            idx = g.indices
+            n_real = len(idx)
+            for key in SCALAR_KEYS:
+                out[key][idx] = scalars[key][off:off + n_real]
+            out["band"][idx] = g.spec.band
+            if pending.collect_tb:
+                cigs = rle_to_cigars(ops[off:off + n_real],
+                                     runs[off:off + n_real],
+                                     lens[off:off + n_real])
+                for pos, cig in zip(idx, cigs):
+                    cigars[pos] = cig
+            off += grp[0].shape[0]  # advance past this group's padded rows
+        if pending.collect_tb:
+            out["cigars"] = cigars
+        if stats is not None:
+            stats["fetched_bytes"] = fetched
+        return out
+
+    # ------------------------------------------------------------------
+    # Compile warm-start.
+    # ------------------------------------------------------------------
+    def warmup(self, lengths, *, mode: str = "global",
+               collect_tb: bool = False) -> int:
+        """Pre-compile the dispatch programs for the signatures a
+        replica will serve, so the first real request does not pay
+        compile latency at traffic time.
+
+        `lengths` is an iterable of representative (q_len, r_len) pairs
+        — one per length class the replica expects, at that class's
+        *maximum* true lengths (the trimmed sweep t_max, and therefore
+        the compiled program, is keyed on the group maximum). The
+        warmup runs one dummy alignment through the full dispatch path
+        (plan -> enqueue -> finalize, or the persistent program), which
+        both populates the in-process jit caches and — with
+        `compilation_cache_dir` set — writes the persistent compilation
+        cache a future replica deserialises from. Returns the number of
+        dispatch groups warmed."""
+        lengths = list(lengths)
+        if not lengths:
+            return 0
+        reads = [np.zeros(int(q), np.int8) for q, _ in lengths]
+        refs = [np.zeros(int(r), np.int8) for _, r in lengths]
+        self.align(reads, refs, mode=mode, collect_tb=collect_tb)
+        return len(self.plan([len(x) for x in reads],
+                             [len(x) for x in refs]))
 
     # ------------------------------------------------------------------
     # Ragged multi-bucket path (lists in, original-order numpy out).
@@ -415,60 +615,17 @@ class AlignmentEngine:
         paying for empty dispatch slots. Output contract is identical to
         the pipelined `align` (bit-exact, asserted by
         tests/test_persistent_dispatch.py)."""
-        if collect_tb and self.decode != "device":
-            raise ValueError(
-                "dispatch='persistent' fuses the traceback decode "
-                "on-device; decode='host' exists only on the pipelined "
-                "path")
-        N = len(reads)
-        out = {k: np.zeros(N, np.int32) for k in SCALAR_KEYS}
-        out["band"] = np.zeros(N, np.int32)
-
-        groups = self.plan([len(x) for x in reads],
-                           [len(x) for x in refs])
-        batch = []
-        for g in groups:
-            idx = g.indices
-            t_max = g.spec.t_max if self.trim else None
-            q_pad, r_pad, n, m = pad_group(
-                [reads[i] for i in idx], [refs[i] for i in idx], g.spec,
-                pad_multiple=PERSISTENT_PAD)
-            _check_t_max(t_max, n, m)
-            batch.append((q_pad, r_pad, n, m, g.spec.band, t_max))
-        if not groups:
+        if not len(reads):
+            out = {k: np.zeros(0, np.int32) for k in SCALAR_KEYS}
+            out["band"] = np.zeros(0, np.int32)
             if collect_tb:
                 out["cigars"] = []
             return out
-
-        merged = self.backend.run_persistent(
-            batch, sc=self.sc, adaptive=self.adaptive,
-            collect_tb=collect_tb, mode=mode, decode=self.decode,
-            cell_dtype=self.cell_dtype)
-
-        if collect_tb:
-            from repro.core.traceback_device import fetch_rle, rle_to_cigars
-            ops, runs, lens = fetch_rle(merged)
-        scalars = {k: np.asarray(merged[k]) for k in SCALAR_KEYS}
-        cigars: list = [None] * N
-        off = 0
-        for g, grp in zip(groups, batch):
-            idx = g.indices
-            n_real = len(idx)
-            for key in SCALAR_KEYS:
-                out[key][idx] = scalars[key][off:off + n_real]
-            out["band"][idx] = g.spec.band
-            if collect_tb:
-                cigs = rle_to_cigars(ops[off:off + n_real],
-                                     runs[off:off + n_real],
-                                     lens[off:off + n_real])
-                for pos, cig in zip(idx, cigs):
-                    cigars[pos] = cig
-            off += grp[0].shape[0]  # advance past this group's padded rows
-        if collect_tb:
-            out["cigars"] = cigars
-        return out
+        pending = self.enqueue_persistent(reads, refs, mode=mode,
+                                          collect_tb=collect_tb)
+        return self.finalize_persistent(pending)
 
 
-__all__ = ["AlignmentEngine", "PendingDispatch", "SCALAR_KEYS",
-           "available_backends", "get_backend", "resolve_backend",
-           "run_dispatch"]
+__all__ = ["AlignmentEngine", "PendingDispatch", "PendingPersistent",
+           "SCALAR_KEYS", "available_backends", "get_backend",
+           "resolve_backend", "run_dispatch"]

@@ -6,10 +6,12 @@ rate, the service's background dispatcher micro-batches them by length
 class and drives the mesh-sharded AlignmentEngine's dispatch pipeline
 (device decode, depth-k lookahead), and the run reports the service
 metrics dict — requests/s, p50/p99 latency, batch fill ratio, bytes
-fetched. The same binary on a TPU slice serves the production mesh
-(the dry-run compiles exactly this dispatch at 16x16 and 2x16x16).
+fetched, flush causes. The same binary on a TPU slice serves the
+production mesh (the dry-run compiles exactly this dispatch at 16x16
+and 2x16x16).
 
-    PYTHONPATH=src python -m repro.launch.serve --reads 512 --rate 2000
+    PYTHONPATH=src python -m repro.launch.serve --reads 512 --rate 2000 \
+        --policy adaptive --warmup --compilation-cache-dir /tmp/rapidx-cc
 """
 
 from __future__ import annotations
@@ -38,6 +40,28 @@ def main():
     ap.add_argument("--profile", default="illumina")
     ap.add_argument("--capacity", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--policy", choices=("static", "adaptive"),
+                    default="adaptive",
+                    help="flush policy: 'adaptive' holds bursty "
+                         "sub-saturation traffic for fill inside a latency "
+                         "budget; 'static' is the fixed min_fill/max_wait "
+                         "rule")
+    ap.add_argument("--depth", default="auto",
+                    help="pipeline depth (max in-flight groups): an "
+                         "integer, or 'auto' to autotune against measured "
+                         "enqueue/finalize latency")
+    ap.add_argument("--dispatch", choices=("pipelined", "persistent"),
+                    default="pipelined",
+                    help="engine dispatch mode; 'persistent' runs each "
+                         "flush as ONE device program (single device, "
+                         "implies --no-mesh)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile the stream's dispatch signatures "
+                         "before accepting traffic")
+    ap.add_argument("--compilation-cache-dir", default=None,
+                    help="persistent XLA compilation cache directory: a "
+                         "restarted replica deserialises its dispatch "
+                         "programs instead of recompiling them")
     ap.add_argument("--no-mesh", action="store_true",
                     help="single-device engine (skip shard_map)")
     args = ap.parse_args()
@@ -45,11 +69,15 @@ def main():
         ap.error("--reads must be positive")
 
     n_dev = len(jax.devices())
-    mesh = None if args.no_mesh else make_debug_mesh(data=n_dev, model=1)
+    use_mesh = not args.no_mesh and args.dispatch != "persistent"
+    mesh = make_debug_mesh(data=n_dev, model=1) if use_mesh else None
     engine = AlignmentEngine(backend="auto", sc=RAPIDX.scoring,
-                             capacity=args.capacity, mesh=mesh)
+                             capacity=args.capacity, mesh=mesh,
+                             dispatch=args.dispatch,
+                             compilation_cache_dir=args.compilation_cache_dir)
     print(f"[serve] devices={n_dev} backend={engine.backend_name} "
-          f"shards={engine.num_shards} scoring={RAPIDX.scoring.name}")
+          f"shards={engine.num_shards} dispatch={engine.dispatch} "
+          f"policy={args.policy} scoring={RAPIDX.scoring.name}")
 
     genome = random_genome(1_000_000, seed=7)
     sim = ReadSimulator(genome, args.profile, seed=8)
@@ -59,9 +87,20 @@ def main():
         ref, read = sim.sample(lengths[k % len(lengths)])
         pairs.append((read, ref))
 
+    depth = args.depth if args.depth == "auto" else int(args.depth)
+    # Warm the per-class dispatch signatures at the stream's maximum
+    # true lengths so the first request pays no compile latency.
+    warmup = None
+    if args.warmup:
+        warmup = [(max(len(rd) for rd, _ in grp),
+                   max(len(rf) for _, rf in grp))
+                  for grp in (pairs[0::2], pairs[1::2]) if grp]
+
     period = 1.0 / args.rate if args.rate > 0 else 0.0
     t0 = time.perf_counter()
-    with AlignmentService(engine, max_wait_ms=args.max_wait_ms) as svc:
+    with AlignmentService(engine, max_wait_ms=args.max_wait_ms,
+                          policy=args.policy, max_inflight_groups=depth,
+                          warmup=warmup) as svc:
         futures = []
         for k, (read, ref) in enumerate(pairs):
             if period:  # open-loop: hold the offered arrival schedule
@@ -80,7 +119,10 @@ def main():
     print(f"[serve] p50={stats['p50_ms']:.1f}ms p99={stats['p99_ms']:.1f}ms "
           f"fill_ratio={stats['fill_ratio']:.2f} "
           f"dispatches={stats['dispatches']} "
-          f"bytes_fetched={stats['bytes_fetched']}")
+          f"bytes_fetched={stats['bytes_fetched']} "
+          f"depth={stats['pipeline_depth']} "
+          f"flushes=fill:{stats['flush_fill']}/timeout:"
+          f"{stats['flush_timeout']}/stall:{stats['flush_stall']}")
 
 
 if __name__ == "__main__":

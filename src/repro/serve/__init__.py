@@ -2,11 +2,19 @@
 
 `AlignmentService` turns the one-shot engine into a long-running
 co-processor front end: bounded-queue admission, continuous
-length-class micro-batching, a depth-k device pipeline, per-request
-futures, and a metrics surface (`ServiceMetrics`).
+length-class micro-batching, a depth-k device pipeline (autotunable),
+per-request futures with SLA priorities, and a metrics surface
+(`ServiceMetrics`). `serve.policy` holds the flush controllers: the
+deterministic `StaticFlushPolicy` and the arrival-rate-aware
+`AdaptiveFlushPolicy`, plus the `DepthAutotuner`.
 """
 
 from repro.serve.metrics import ServiceMetrics
+from repro.serve.policy import (AdaptiveFlushPolicy, DepthAutotuner,
+                                FlushPolicy, StaticFlushPolicy,
+                                resolve_policy)
 from repro.serve.service import AlignmentService
 
-__all__ = ["AlignmentService", "ServiceMetrics"]
+__all__ = ["AlignmentService", "ServiceMetrics", "FlushPolicy",
+           "StaticFlushPolicy", "AdaptiveFlushPolicy", "DepthAutotuner",
+           "resolve_policy"]

@@ -10,12 +10,19 @@ watches to see whether the co-processor is kept fed:
   fill_ratio         real pairs / padded dispatch slots, cumulative —
                      1.0 means every dispatch ran with its compute
                      memory full (paper Fig. 6's stated goal)
-  bytes_fetched      device->host result bytes materialised by finalize
-                     (RLE CIGARs + scalars on the decode="device" path)
+  bytes_fetched      device->host bytes actually materialised by
+                     finalize (padded slice rows included — the bytes
+                     the host really paid for, accumulated per flush,
+                     so the counter is strictly monotone in dispatches)
+  flush_*            flush-cause counters: fill / timeout / stall /
+                     priority / shutdown (see serve.policy)
+  priority           per-SLA-class sub-dict: completed count and
+                     p50/p99 latency for interactive / normal / bulk
 
-Latencies are kept in a bounded reservoir (the most recent
-`LATENCY_WINDOW` samples) so a long-lived service never grows without
-bound; percentiles are over that window.
+Latencies are kept in bounded reservoirs (the most recent
+`LATENCY_WINDOW` samples, overall and per priority class) so a
+long-lived service never grows without bound; percentiles are over
+those windows.
 """
 
 from __future__ import annotations
@@ -26,26 +33,38 @@ import time
 
 import numpy as np
 
+from repro.serve.policy import FLUSH_CAUSES, PRIORITIES
+
 #: Latency samples retained for the percentile window.
 LATENCY_WINDOW = 100_000
 
 
+def _percentiles(lat: np.ndarray) -> dict:
+    out = {}
+    for name, q in (("p50_ms", 50.0), ("p99_ms", 99.0)):
+        out[name] = (float(np.percentile(lat, q)) * 1e3
+                     if lat.size else 0.0)
+    out["mean_ms"] = float(lat.mean()) * 1e3 if lat.size else 0.0
+    return out
+
+
 class ServiceMetrics:
-    """Thread-safe counters + latency reservoir for one service."""
+    """Thread-safe counters + latency reservoirs for one service."""
 
     def __init__(self):
         self._lock = threading.Lock()
         self._t_start = time.perf_counter()
         self._latencies = collections.deque(maxlen=LATENCY_WINDOW)
+        self._latencies_by_priority = {
+            p: collections.deque(maxlen=LATENCY_WINDOW) for p in PRIORITIES}
         self.submitted = 0
         self.completed = 0
         self.dispatches = 0        # device dispatch groups enqueued
         self.real_pairs = 0        # true pairs across all dispatches
         self.padded_slots = 0      # padded slots across all dispatches
         self.bytes_fetched = 0     # host bytes materialised by finalize
-        self.flush_fill = 0        # flushes triggered by min_fill
-        self.flush_timeout = 0     # flushes triggered by max_wait
-        self.flush_shutdown = 0    # flushes triggered by close()
+        self.flush_causes = collections.Counter()  # cause -> flushes
+        self.completed_by_priority = collections.Counter()
 
     # -- recording (called by service internals) -----------------------
     def record_submit(self) -> None:
@@ -54,12 +73,7 @@ class ServiceMetrics:
 
     def record_flush(self, cause: str) -> None:
         with self._lock:
-            if cause == "fill":
-                self.flush_fill += 1
-            elif cause == "timeout":
-                self.flush_timeout += 1
-            else:
-                self.flush_shutdown += 1
+            self.flush_causes[cause] += 1
 
     def record_dispatch(self, num_real: int, num_slots: int) -> None:
         with self._lock:
@@ -67,11 +81,20 @@ class ServiceMetrics:
             self.real_pairs += num_real
             self.padded_slots += num_slots
 
-    def record_results(self, latencies_s, nbytes: int) -> None:
+    def record_results(self, latencies_s, nbytes: int,
+                       priorities=None) -> None:
+        """One finalized group's request latencies and its *actual*
+        device->host fetch traffic (padded rows included — accumulated
+        per flush, never overwritten). `priorities` optionally labels
+        each latency sample with its request's SLA class."""
         with self._lock:
             self.completed += len(latencies_s)
             self.bytes_fetched += int(nbytes)
             self._latencies.extend(latencies_s)
+            if priorities is not None:
+                for lat, prio in zip(latencies_s, priorities):
+                    self.completed_by_priority[prio] += 1
+                    self._latencies_by_priority[prio].append(lat)
 
     # -- rendering -----------------------------------------------------
     def snapshot(self) -> dict:
@@ -79,6 +102,9 @@ class ServiceMetrics:
         with self._lock:
             elapsed = max(time.perf_counter() - self._t_start, 1e-9)
             lat = np.asarray(self._latencies, np.float64)
+            lat_by_prio = {p: np.asarray(d, np.float64)
+                           for p, d in self._latencies_by_priority.items()
+                           if len(d)}
             out = {
                 "submitted": self.submitted,
                 "completed": self.completed,
@@ -87,15 +113,16 @@ class ServiceMetrics:
                 "fill_ratio": (self.real_pairs / self.padded_slots
                                if self.padded_slots else 0.0),
                 "bytes_fetched": self.bytes_fetched,
-                "flush_fill": self.flush_fill,
-                "flush_timeout": self.flush_timeout,
-                "flush_shutdown": self.flush_shutdown,
                 "elapsed_s": elapsed,
             }
-        for name, q in (("p50_ms", 50.0), ("p99_ms", 99.0)):
-            out[name] = (float(np.percentile(lat, q)) * 1e3
-                         if lat.size else 0.0)
-        out["mean_ms"] = float(lat.mean()) * 1e3 if lat.size else 0.0
+            for cause in FLUSH_CAUSES:
+                out[f"flush_{cause}"] = self.flush_causes[cause]
+            completed_by_prio = dict(self.completed_by_priority)
+        out.update(_percentiles(lat))
+        out["priority"] = {
+            p: {"completed": completed_by_prio.get(p, 0),
+                **_percentiles(lat_by_prio[p])}
+            for p in lat_by_prio}
         return out
 
 

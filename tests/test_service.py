@@ -47,14 +47,17 @@ def _engine(backend, capacity=4):
                            backend_opts=opts)
 
 
+@pytest.mark.parametrize("policy", ["static", "adaptive"])
 @pytest.mark.parametrize("backend", ["reference", "pallas"])
-def test_service_bit_identical_to_one_shot_align(backend):
+def test_service_bit_identical_to_one_shot_align(backend, policy):
     """Futures resolve to exactly the one-shot engine.align results —
-    every scalar, the band, and the CIGAR — on both backends."""
+    every scalar, the band, and the CIGAR — on both backends, under
+    both flush policies (a policy only changes WHEN a batch
+    dispatches, never what it computes)."""
     reads, refs = _mixed_pairs(10)
     one = _engine(backend).align(reads, refs, collect_tb=True)
     with AlignmentService(_engine(backend), collect_tb=True,
-                          max_wait_ms=2.0) as svc:
+                          max_wait_ms=2.0, policy=policy) as svc:
         futures = [svc.submit(q, r) for q, r in zip(reads, refs)]
         results = [f.result(timeout=300) for f in futures]
     for i in range(len(reads)):
@@ -235,7 +238,7 @@ def test_finalize_failure_fails_inflight_futures():
     boom = RuntimeError("fetch exploded")
 
     class FinalizeDies(AlignmentEngine):
-        def finalize_group(self, pending):
+        def finalize_group(self, pending, **kw):
             raise boom
 
     reads, refs = _mixed_pairs(3, lengths=(40,), seed=31)
@@ -246,6 +249,120 @@ def test_finalize_failure_fails_inflight_futures():
         with pytest.raises(RuntimeError):
             f.result(timeout=60)
     svc.close()
+
+
+def test_service_persistent_dispatch_bit_identical():
+    """A dispatch='persistent' engine behind the service (each flush =
+    ONE device program) returns the same results as the one-shot
+    pipelined engine."""
+    reads, refs = _mixed_pairs(10)
+    one = _engine("reference").align(reads, refs, collect_tb=True)
+    eng = AlignmentEngine(backend="reference", capacity=4,
+                          dispatch="persistent")
+    with AlignmentService(eng, collect_tb=True, max_wait_ms=2.0,
+                          policy="adaptive") as svc:
+        futures = [svc.submit(q, r) for q, r in zip(reads, refs)]
+        results = [f.result(timeout=300) for f in futures]
+        stats = svc.stats()
+    for i in range(len(reads)):
+        for k in SCALARS:
+            assert int(results[i][k]) == int(one[k][i]), (i, k)
+        assert int(results[i]["band"]) == int(one["band"][i])
+        assert results[i]["cigar"] == one["cigars"][i]
+    assert stats["completed"] == len(reads)
+    assert stats["bytes_fetched"] > 0
+
+
+def test_service_rejects_persistent_host_decode_at_construction():
+    """An unsupported engine/service combination must fail loudly when
+    the service is built, not on the first flush."""
+    eng = AlignmentEngine(backend="reference", capacity=4,
+                          dispatch="persistent", decode="host")
+    with pytest.raises(ValueError, match="persistent"):
+        AlignmentService(eng, collect_tb=True)
+    # Without traceback collection host decode never runs: accepted.
+    with AlignmentService(eng, collect_tb=False, max_wait_ms=2.0) as svc:
+        reads, refs = _mixed_pairs(2, lengths=(40,), seed=47)
+        assert int(svc.submit(reads[0], refs[0]).result(timeout=300)
+                   ["score"]) == int(
+            _engine("reference").align(reads[:1], refs[:1])["score"][0])
+
+
+def test_bytes_fetched_accumulates_across_flushes():
+    """bytes_fetched counts the real host<-device fetch traffic of each
+    flush and accumulates monotonically — not a per-call constant."""
+    reads, refs = _mixed_pairs(8, lengths=(60,), seed=37)
+    with AlignmentService(_engine("reference", capacity=4),
+                          collect_tb=True, max_wait_ms=1.0,
+                          min_fill=4) as svc:
+        for f in [svc.submit(q, r) for q, r in zip(reads[:4], refs[:4])]:
+            f.result(timeout=300)
+        first = svc.stats()["bytes_fetched"]
+        assert first > 0
+        for f in [svc.submit(q, r) for q, r in zip(reads[4:], refs[4:])]:
+            f.result(timeout=300)
+        second = svc.stats()["bytes_fetched"]
+    assert second > first  # the second flush added its own fetch bytes
+
+
+def test_priority_metrics_and_validation():
+    """Per-priority completion counts and latency percentiles land in
+    stats()['priority']; an unknown priority is refused at submit."""
+    reads, refs = _mixed_pairs(6, lengths=(50,), seed=43)
+    with AlignmentService(_engine("reference", capacity=4),
+                          max_wait_ms=10_000.0, min_fill=64) as svc:
+        with pytest.raises(ValueError, match="priority"):
+            svc.submit(reads[0], refs[0], priority="urgent")
+        prios = ["interactive", "normal", "bulk"] * 2
+        futures = [svc.submit(q, r, priority=p)
+                   for (q, r), p in zip(zip(reads, refs), prios)]
+        for f in futures:
+            f.result(timeout=300)
+        stats = svc.stats()
+    for p in ("interactive", "normal", "bulk"):
+        assert stats["priority"][p]["completed"] == 2, p
+        assert stats["priority"][p]["p99_ms"] >= 0.0
+    # The interactive arrivals preempted batching (min_fill unreachable,
+    # max_wait effectively infinite — only priority can have flushed).
+    assert stats["flush_priority"] >= 1
+    assert stats["flush_timeout"] == 0
+
+
+def test_warmup_with_persistent_cache_removes_first_request_compile(tmp_path):
+    """Warm-start acceptance: service A populates the persistent XLA
+    compilation cache; after clearing JAX's in-process caches a fresh
+    service constructed with warmup= pre-compiles from the file cache,
+    so its FIRST request shows no compile spike (within 2x the steady
+    p50 measured across the run)."""
+    import jax
+
+    cache_dir = tmp_path / "xla-cache"
+    reads, refs = _mixed_pairs(12, lengths=(64,), seed=41)
+    # Entries are persisted only when a compile actually runs: drop any
+    # executables earlier tests left in the in-process jit cache so
+    # service A really compiles (and therefore persists) its programs.
+    jax.clear_caches()
+    eng_a = AlignmentEngine(backend="reference", capacity=4,
+                            compilation_cache_dir=str(cache_dir))
+    with AlignmentService(eng_a, max_wait_ms=1.0, min_fill=1) as svc:
+        for f in [svc.submit(q, r) for q, r in zip(reads, refs)]:
+            f.result(timeout=300)
+    assert any(cache_dir.iterdir())  # the dispatch program was persisted
+
+    jax.clear_caches()  # drop in-process executables: a "cold" replica
+    eng_b = AlignmentEngine(backend="reference", capacity=4,
+                            compilation_cache_dir=str(cache_dir))
+    warm = [(max(len(q) for q in reads), max(len(r) for r in refs))]
+    with AlignmentService(eng_b, max_wait_ms=1.0, min_fill=1,
+                          warmup=warm) as svc:
+        t0 = time.perf_counter()
+        svc.submit(reads[0], refs[0]).result(timeout=300)
+        first_ms = (time.perf_counter() - t0) * 1e3
+        for f in [svc.submit(q, r) for q, r in zip(reads[1:], refs[1:])]:
+            f.result(timeout=300)
+        steady_p50 = svc.stats()["p50_ms"]
+    # An XLA compile costs hundreds of ms; a warm dispatch costs ~p50.
+    assert first_ms <= 2.0 * max(steady_p50, 25.0), (first_ms, steady_p50)
 
 
 def test_metrics_surface_keys_and_fill_ratio():

@@ -1,20 +1,29 @@
 #!/usr/bin/env python
-"""Fail CI when an engine benchmark row regresses vs the committed
-baseline.
+"""Fail CI when an engine or service benchmark row regresses vs the
+committed baseline.
 
 Compares a freshly generated BENCH_engine.json against the previous
 commit's checked-in copy (``git show HEAD:BENCH_engine.json`` by
-default) and exits non-zero if any ``engine/*`` row's ``us_per_call``
-grew by more than the threshold (default 25% — wide enough to absorb
-shared-runner noise on the host-side pipeline timings, tight enough to
-catch a real scheduling or kernel regression). Rows are matched on
-(name, backend); rows present only on one side are reported but never
-fail the check (new benchmarks land with their first baseline, retired
-ones leave with their last).
+default) and exits non-zero when:
+
+* an ``engine/*`` row's ``us_per_call`` grew by more than the
+  threshold (default 25% — wide enough to absorb shared-runner noise
+  on the host-side pipeline timings, tight enough to catch a real
+  scheduling or kernel regression), or
+* a ``service/*`` row's ``fill_ratio`` (parsed from the row's
+  ``derived`` string) dropped by more than 0.05 absolute, or its
+  ``p99_ms`` grew by more than the threshold — the serving layer's
+  wins are batch fill and tail latency, not us_per_call (which for an
+  open-loop row mostly measures the offered arrival schedule).
+
+Rows are matched on (name, backend); rows present only on one side are
+reported but never fail the check (new benchmarks land with their
+first baseline, retired ones leave with their last).
 
 Usage:
     python tools/check_bench_regression.py NEW.json [--baseline REF]
         [--threshold 0.25] [--prefix engine/]
+        [--service-prefix service/] [--fill-drop 0.05]
 
 ``--baseline`` is a git ref:path spec (default HEAD:BENCH_engine.json)
 or a plain file path.
@@ -43,33 +52,92 @@ def load_rows(spec: str) -> list[dict]:
     return json.loads(out.stdout)
 
 
+def parse_derived(row: dict) -> dict:
+    """The ``derived`` column is ``k=v;k=v;...``; numeric values become
+    floats, the rest stay strings."""
+    out = {}
+    for part in (row.get("derived") or "").split(";"):
+        k, sep, v = part.partition("=")
+        if not sep:
+            continue
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
 def index(rows: list[dict], prefix: str) -> dict:
-    return {(r["name"], r.get("backend")): float(r["us_per_call"])
+    return {(r["name"], r.get("backend")): r
             for r in rows if r["name"].startswith(prefix)}
 
 
-def check(new_rows: list[dict], base_rows: list[dict], *,
-          threshold: float, prefix: str) -> int:
-    new = index(new_rows, prefix)
-    base = index(base_rows, prefix)
+def check_engine(new: dict, base: dict, *, threshold: float) -> list[str]:
     failures = []
     for key in sorted(new.keys() | base.keys(), key=str):
         name = f"{key[0]} [{key[1]}]"
         if key not in base:
-            print(f"NEW      {name}: {new[key]:.2f} us (no baseline)")
+            print(f"NEW      {name}: "
+                  f"{float(new[key]['us_per_call']):.2f} us (no baseline)")
             continue
         if key not in new:
-            print(f"RETIRED  {name}: baseline {base[key]:.2f} us")
+            print(f"RETIRED  {name}: baseline "
+                  f"{float(base[key]['us_per_call']):.2f} us")
             continue
-        ratio = new[key] / base[key] if base[key] else 1.0
+        n, b = float(new[key]["us_per_call"]), float(base[key]["us_per_call"])
+        ratio = n / b if b else 1.0
         status = "FAIL" if ratio > 1.0 + threshold else "ok"
-        print(f"{status:8} {name}: {base[key]:.2f} -> {new[key]:.2f} us "
+        print(f"{status:8} {name}: {b:.2f} -> {n:.2f} us "
               f"({(ratio - 1) * 100:+.1f}%)")
         if status == "FAIL":
             failures.append(name)
+    return failures
+
+
+def check_service(new: dict, base: dict, *, threshold: float,
+                  fill_drop: float) -> list[str]:
+    failures = []
+    for key in sorted(new.keys() | base.keys(), key=str):
+        name = f"{key[0]} [{key[1]}]"
+        if key not in base:
+            print(f"NEW      {name} (no baseline)")
+            continue
+        if key not in new:
+            print(f"RETIRED  {name}")
+            continue
+        nd, bd = parse_derived(new[key]), parse_derived(base[key])
+        problems = []
+        if "fill_ratio" in nd and "fill_ratio" in bd:
+            drop = bd["fill_ratio"] - nd["fill_ratio"]
+            if drop > fill_drop:
+                problems.append(f"fill_ratio {bd['fill_ratio']:.2f} -> "
+                                f"{nd['fill_ratio']:.2f} (-{drop:.2f})")
+        if bd.get("p99_ms", 0) and "p99_ms" in nd:
+            ratio = nd["p99_ms"] / bd["p99_ms"]
+            if ratio > 1.0 + threshold:
+                problems.append(f"p99_ms {bd['p99_ms']:.2f} -> "
+                                f"{nd['p99_ms']:.2f} "
+                                f"({(ratio - 1) * 100:+.0f}%)")
+        status = "FAIL" if problems else "ok"
+        detail = "; ".join(problems) if problems else (
+            f"fill={nd.get('fill_ratio', float('nan')):.2f} "
+            f"p99={nd.get('p99_ms', float('nan')):.2f}ms")
+        print(f"{status:8} {name}: {detail}")
+        if problems:
+            failures.append(name)
+    return failures
+
+
+def check(new_rows: list[dict], base_rows: list[dict], *,
+          threshold: float, prefix: str, service_prefix: str,
+          fill_drop: float) -> int:
+    failures = check_engine(index(new_rows, prefix),
+                            index(base_rows, prefix), threshold=threshold)
+    failures += check_service(index(new_rows, service_prefix),
+                              index(base_rows, service_prefix),
+                              threshold=threshold, fill_drop=fill_drop)
     if failures:
-        print(f"\n{len(failures)} row(s) regressed more than "
-              f"{threshold * 100:.0f}%: {', '.join(failures)}",
+        print(f"\n{len(failures)} row(s) regressed: {', '.join(failures)}",
               file=sys.stderr)
         return 1
     return 0
@@ -81,12 +149,18 @@ def main() -> int:
     ap.add_argument("--baseline", default="HEAD:BENCH_engine.json",
                     help="baseline: file path or git ref:path spec")
     ap.add_argument("--threshold", type=float, default=0.25,
-                    help="allowed relative us_per_call growth")
+                    help="allowed relative us_per_call / p99_ms growth")
     ap.add_argument("--prefix", default="engine/",
-                    help="row-name prefix under the gate")
+                    help="row-name prefix under the us_per_call gate")
+    ap.add_argument("--service-prefix", default="service/",
+                    help="row-name prefix under the fill/p99 gate")
+    ap.add_argument("--fill-drop", type=float, default=0.05,
+                    help="allowed absolute fill_ratio drop for service rows")
     args = ap.parse_args()
     return check(load_rows(args.new), load_rows(args.baseline),
-                 threshold=args.threshold, prefix=args.prefix)
+                 threshold=args.threshold, prefix=args.prefix,
+                 service_prefix=args.service_prefix,
+                 fill_drop=args.fill_drop)
 
 
 if __name__ == "__main__":
