@@ -26,6 +26,13 @@ bench_engine_throughput — interpret mode is not a performance mode):
                                   Markov-modulated arrivals, same mean
                                   rate — the adaptive policy's reason to
                                   exist
+  service/router_closed_loop_<N>r the same closed-loop stream through
+                                  the replicated tier (AlignmentRouter
+                                  over N single-engine replicas); the
+                                  row's derived `scaling` is its rate
+                                  over the 1-replica router rate —
+                                  the tier's throughput-scaling factor,
+                                  regression-gated alongside p99
 
 Every row's `derived` records `offered_rate`, `burstiness`, `policy`,
 and `arrival_seed`, so trajectories stay comparable across PRs: the
@@ -47,7 +54,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import MINIMAP2, AlignmentEngine
-from repro.serve import AlignmentService
+from repro.serve import AlignmentRouter, AlignmentService
 
 #: Mixed length classes: two dispatch buckets, so the dispatcher really
 #: micro-batches (per-class groups) instead of one degenerate bucket.
@@ -126,6 +133,23 @@ def _drive(engine, pairs, *, schedule=None, max_wait_ms: float,
     return wall, stats
 
 
+def _drive_router(engines, pairs, *, max_wait_ms: float):
+    """One replicated-tier run: the closed-loop stream through an
+    `AlignmentRouter` over pre-warmed engines (one replica each)."""
+    with AlignmentRouter(len(engines), engine_factory=lambda i: engines[i],
+                         collect_tb=True,
+                         max_wait_ms=max_wait_ms) as router:
+        t0 = time.perf_counter()
+        futures = [router.submit(read, ref) for read, ref in pairs]
+        for f in futures:
+            f.result()
+        wall = time.perf_counter() - t0
+        stats = router.stats()
+    # The aggregate has no single policy name; the tier ran static.
+    stats.setdefault("policy", "static")
+    return wall, stats
+
+
 def _derived(engine, stats, wall, n_pairs, *, offered_rate=0.0,
              burstiness=0.0, extra=""):
     return (f"reads_per_s={n_pairs / wall:.4g};"
@@ -174,6 +198,29 @@ def run(backends=("reference", "pallas"), smoke=False):
              _derived(eng_p, stats_p, wall_p, n_pairs,
                       extra=f";n_pairs={n_pairs}"),
              backend=backend)
+
+        # Replicated tier at 1 and 2 replicas: same stream, same
+        # engines-per-replica config; `scaling` is the 2r/1r throughput
+        # ratio (1.0 on the 1r row). Each replica's engine is warmed
+        # outside the timed window, like the single-service rows.
+        router_rate = {}
+        for n_replicas in (1, 2):
+            engines = [AlignmentEngine(backend=backend, sc=MINIMAP2,
+                                       capacity=16)
+                       for _ in range(n_replicas)]
+            for eng in engines:
+                _drive(eng, pairs, max_wait_ms=max_wait_ms)
+            wall_r, stats_r = _drive_router(engines, pairs,
+                                            max_wait_ms=max_wait_ms)
+            router_rate[n_replicas] = n_pairs / wall_r
+            scaling = router_rate[n_replicas] / router_rate[1]
+            emit(f"service/router_closed_loop_{n_replicas}r",
+                 wall_r / n_pairs * 1e6,
+                 _derived(engines[0], stats_r, wall_r, n_pairs,
+                          extra=(f";n_pairs={n_pairs}"
+                                 f";replicas={n_replicas}"
+                                 f";scaling={scaling:.3f}")),
+                 backend=backend)
 
         sweeps = [(frac, 0.0) for frac in fracs]
         sweeps += [(0.8, 1.0)] if not smoke else []

@@ -10,8 +10,16 @@ fetched, flush causes. The same binary on a TPU slice serves the
 production mesh (the dry-run compiles exactly this dispatch at 16x16
 and 2x16x16).
 
+`--replicas N` (N > 1) serves the stream through the replicated tier
+instead: an `repro.serve.AlignmentRouter` over N single-engine
+replicas (DESIGN.md §11) — scale-OUT by dispatcher count, where the
+mesh is scale-UP by device count, so the replicated path runs each
+replica mesh-free.
+
     PYTHONPATH=src python -m repro.launch.serve --reads 512 --rate 2000 \
         --policy adaptive --warmup --compilation-cache-dir /tmp/rapidx-cc
+
+    PYTHONPATH=src python -m repro.launch.serve --reads 512 --replicas 2
 """
 
 from __future__ import annotations
@@ -25,7 +33,7 @@ from repro.configs.rapidx import CONFIG as RAPIDX
 from repro.core.engine import AlignmentEngine
 from repro.data.genome import ReadSimulator, random_genome
 from repro.launch.mesh import make_debug_mesh
-from repro.serve import AlignmentService
+from repro.serve import AlignmentRouter, AlignmentService
 
 
 def main():
@@ -64,20 +72,33 @@ def main():
                          "programs instead of recompiling them")
     ap.add_argument("--no-mesh", action="store_true",
                     help="single-device engine (skip shard_map)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving-tier replica count: >1 routes the "
+                         "stream through an AlignmentRouter over N "
+                         "single-engine replicas with drain/failover "
+                         "(scale-out; each replica runs mesh-free)")
     args = ap.parse_args()
     if args.reads <= 0:
         ap.error("--reads must be positive")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
 
     n_dev = len(jax.devices())
-    use_mesh = not args.no_mesh and args.dispatch != "persistent"
+    use_mesh = (not args.no_mesh and args.dispatch != "persistent"
+                and args.replicas == 1)
     mesh = make_debug_mesh(data=n_dev, model=1) if use_mesh else None
-    engine = AlignmentEngine(backend="auto", sc=RAPIDX.scoring,
-                             capacity=args.capacity, mesh=mesh,
-                             dispatch=args.dispatch,
-                             compilation_cache_dir=args.compilation_cache_dir)
+
+    def make_engine(_i=0):
+        return AlignmentEngine(
+            backend="auto", sc=RAPIDX.scoring, capacity=args.capacity,
+            mesh=mesh, dispatch=args.dispatch,
+            compilation_cache_dir=args.compilation_cache_dir)
+
+    engine = make_engine()
     print(f"[serve] devices={n_dev} backend={engine.backend_name} "
           f"shards={engine.num_shards} dispatch={engine.dispatch} "
-          f"policy={args.policy} scoring={RAPIDX.scoring.name}")
+          f"replicas={args.replicas} policy={args.policy} "
+          f"scoring={RAPIDX.scoring.name}")
 
     genome = random_genome(1_000_000, seed=7)
     sim = ReadSimulator(genome, args.profile, seed=8)
@@ -96,11 +117,21 @@ def main():
                    max(len(rf) for _, rf in grp))
                   for grp in (pairs[0::2], pairs[1::2]) if grp]
 
+    service_opts = dict(max_wait_ms=args.max_wait_ms, policy=args.policy,
+                        max_inflight_groups=depth, warmup=warmup)
+    if args.replicas > 1:
+        # Replica 0 reuses the probe engine; the rest get their own
+        # (an engine is owned by exactly one dispatcher thread).
+        front = AlignmentRouter(
+            args.replicas,
+            engine_factory=lambda i: engine if i == 0 else make_engine(),
+            **service_opts)
+    else:
+        front = AlignmentService(engine, **service_opts)
+
     period = 1.0 / args.rate if args.rate > 0 else 0.0
     t0 = time.perf_counter()
-    with AlignmentService(engine, max_wait_ms=args.max_wait_ms,
-                          policy=args.policy, max_inflight_groups=depth,
-                          warmup=warmup) as svc:
+    with front:
         futures = []
         for k, (read, ref) in enumerate(pairs):
             if period:  # open-loop: hold the offered arrival schedule
@@ -108,19 +139,21 @@ def main():
                 delay = target - time.perf_counter()
                 if delay > 0:
                     time.sleep(delay)
-            futures.append(svc.submit(read, ref))
+            futures.append(front.submit(read, ref))
         scores = [f.result()["score"] for f in futures]
-        stats = svc.stats()
+        stats = front.stats()
     wall = time.perf_counter() - t0
 
     mean = sum(int(s) for s in scores) / len(scores)
     print(f"[serve] {args.reads} reads in {wall:.2f}s "
           f"({args.reads / wall:.0f} reads/s) mean_score={mean:.1f}")
+    tier = (f" replicas_serving={stats['replicas_serving']}"
+            if "replicas_serving" in stats else
+            f" depth={stats['pipeline_depth']}")
     print(f"[serve] p50={stats['p50_ms']:.1f}ms p99={stats['p99_ms']:.1f}ms "
           f"fill_ratio={stats['fill_ratio']:.2f} "
           f"dispatches={stats['dispatches']} "
-          f"bytes_fetched={stats['bytes_fetched']} "
-          f"depth={stats['pipeline_depth']} "
+          f"bytes_fetched={stats['bytes_fetched']}{tier} "
           f"flushes=fill:{stats['flush_fill']}/timeout:"
           f"{stats['flush_timeout']}/stall:{stats['flush_stall']}")
 

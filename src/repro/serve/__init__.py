@@ -1,4 +1,4 @@
-"""Streaming serving layer over the AlignmentEngine (DESIGN.md §8).
+"""Streaming serving layer over the AlignmentEngine (DESIGN.md §8/§11).
 
 `AlignmentService` turns the one-shot engine into a long-running
 co-processor front end: bounded-queue admission, continuous
@@ -6,15 +6,21 @@ length-class micro-batching, a depth-k device pipeline (autotunable),
 per-request futures with SLA priorities, and a metrics surface
 (`ServiceMetrics`). `serve.policy` holds the flush controllers: the
 deterministic `StaticFlushPolicy` and the arrival-rate-aware
-`AdaptiveFlushPolicy`, plus the `DepthAutotuner`.
+`AdaptiveFlushPolicy`, plus the `DepthAutotuner`. `serve.router` is
+the replicated tier: `ReplicaPool` manages N service replicas
+(drain / restart / failover) and `AlignmentRouter` load-balances the
+client surface across them, aggregating metrics exactly
+(`aggregate_metrics`).
 """
 
-from repro.serve.metrics import ServiceMetrics
+from repro.serve.metrics import ServiceMetrics, aggregate_metrics
 from repro.serve.policy import (AdaptiveFlushPolicy, DepthAutotuner,
                                 FlushPolicy, StaticFlushPolicy,
                                 resolve_policy)
+from repro.serve.router import AlignmentRouter, ReplicaPool
 from repro.serve.service import AlignmentService
 
-__all__ = ["AlignmentService", "ServiceMetrics", "FlushPolicy",
+__all__ = ["AlignmentService", "AlignmentRouter", "ReplicaPool",
+           "ServiceMetrics", "aggregate_metrics", "FlushPolicy",
            "StaticFlushPolicy", "AdaptiveFlushPolicy", "DepthAutotuner",
            "resolve_policy"]

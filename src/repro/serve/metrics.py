@@ -97,33 +97,89 @@ class ServiceMetrics:
                     self._latencies_by_priority[prio].append(lat)
 
     # -- rendering -----------------------------------------------------
-    def snapshot(self) -> dict:
-        """The service metrics dict (a point-in-time copy, safe to keep)."""
+    def _raw(self) -> dict:
+        """A consistent copy of every counter and latency reservoir
+        (one lock acquisition) — the unit `snapshot` renders and
+        `aggregate_metrics` merges across replicas."""
         with self._lock:
-            elapsed = max(time.perf_counter() - self._t_start, 1e-9)
-            lat = np.asarray(self._latencies, np.float64)
-            lat_by_prio = {p: np.asarray(d, np.float64)
-                           for p, d in self._latencies_by_priority.items()
-                           if len(d)}
-            out = {
+            return {
+                "elapsed_s": max(time.perf_counter() - self._t_start, 1e-9),
+                "latencies": list(self._latencies),
+                "latencies_by_priority": {
+                    p: list(d)
+                    for p, d in self._latencies_by_priority.items()},
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "dispatches": self.dispatches,
-                "requests_per_s": self.completed / elapsed,
-                "fill_ratio": (self.real_pairs / self.padded_slots
-                               if self.padded_slots else 0.0),
+                "real_pairs": self.real_pairs,
+                "padded_slots": self.padded_slots,
                 "bytes_fetched": self.bytes_fetched,
-                "elapsed_s": elapsed,
+                "flush_causes": dict(self.flush_causes),
+                "completed_by_priority": dict(self.completed_by_priority),
             }
-            for cause in FLUSH_CAUSES:
-                out[f"flush_{cause}"] = self.flush_causes[cause]
-            completed_by_prio = dict(self.completed_by_priority)
-        out.update(_percentiles(lat))
-        out["priority"] = {
-            p: {"completed": completed_by_prio.get(p, 0),
-                **_percentiles(lat_by_prio[p])}
-            for p in lat_by_prio}
-        return out
+
+    def snapshot(self) -> dict:
+        """The service metrics dict (a point-in-time copy, safe to keep)."""
+        return _render(self._raw())
 
 
-__all__ = ["ServiceMetrics", "LATENCY_WINDOW"]
+def _render(raw: dict) -> dict:
+    """Render one raw counter copy (or a merge of several) into the
+    metrics dict surface."""
+    out = {
+        "submitted": raw["submitted"],
+        "completed": raw["completed"],
+        "dispatches": raw["dispatches"],
+        "requests_per_s": raw["completed"] / raw["elapsed_s"],
+        "fill_ratio": (raw["real_pairs"] / raw["padded_slots"]
+                       if raw["padded_slots"] else 0.0),
+        "real_pairs": raw["real_pairs"],
+        "padded_slots": raw["padded_slots"],
+        "bytes_fetched": raw["bytes_fetched"],
+        "elapsed_s": raw["elapsed_s"],
+    }
+    for cause in FLUSH_CAUSES:
+        out[f"flush_{cause}"] = raw["flush_causes"].get(cause, 0)
+    out.update(_percentiles(np.asarray(raw["latencies"], np.float64)))
+    out["priority"] = {
+        p: {"completed": raw["completed_by_priority"].get(p, 0),
+            **_percentiles(np.asarray(d, np.float64))}
+        for p, d in raw["latencies_by_priority"].items() if d}
+    return out
+
+
+def aggregate_metrics(metrics) -> dict:
+    """Exact cross-replica aggregate of several `ServiceMetrics`.
+
+    Counters sum; the fill ratio is recomputed from the summed real /
+    padded pair counts (never an average of ratios); latency
+    percentiles are over the concatenated reservoirs, so the aggregate
+    p99 is the tier's true tail, not some replica's. `elapsed_s` is the
+    longest-lived replica's clock — the tier's wall time — and
+    `requests_per_s` is total completions over it. Used by the
+    replicated serving tier's `AlignmentRouter.stats()`; note a
+    failed-over request is counted `submitted` once per replica that
+    accepted it (the router's `reroutes` counter tracks the overlap).
+    """
+    raws = [m._raw() for m in metrics]
+    merged = {
+        "elapsed_s": max((r["elapsed_s"] for r in raws), default=1e-9),
+        "latencies": [x for r in raws for x in r["latencies"]],
+        "latencies_by_priority": {
+            p: [x for r in raws
+                for x in r["latencies_by_priority"].get(p, [])]
+            for p in PRIORITIES},
+        "flush_causes": {
+            c: sum(r["flush_causes"].get(c, 0) for r in raws)
+            for c in FLUSH_CAUSES},
+        "completed_by_priority": {
+            p: sum(r["completed_by_priority"].get(p, 0) for r in raws)
+            for p in PRIORITIES},
+    }
+    for key in ("submitted", "completed", "dispatches", "real_pairs",
+                "padded_slots", "bytes_fetched"):
+        merged[key] = sum(r[key] for r in raws)
+    return _render(merged)
+
+
+__all__ = ["ServiceMetrics", "aggregate_metrics", "LATENCY_WINDOW"]

@@ -1,9 +1,16 @@
-"""Hypothesis property tests for the paper's bit-width invariants.
+"""Hypothesis property tests for the paper's bit-width invariants —
+plus the replicated serving tier's routing invariants.
 
 Paper §III-B / §IV-B: after the Eq. (4) shift, every wavefront quantity
 lies in [0, M + 2o + 2e] for ANY sequences and ANY affine scoring — the
 fixed-precision claim that turns 32-bit DP into 5-bit (3-bit for edit
 distance). We fuzz sequences AND scoring parameters.
+
+The serving-tier properties (DESIGN.md §11) fuzz ragged request
+streams through an `AlignmentRouter`: for ANY stream shape, replica
+count, and balancer seed, every accepted request resolves exactly
+once, bit-identical to the single-engine oracle, and no dispatch
+slice ever straddles replicas.
 """
 
 import numpy as np
@@ -81,3 +88,71 @@ def test_edit_distance_triangle_vs_lengths(q, r):
     assert abs(len(q) - len(r)) <= d <= max(len(q), len(r))
     # And the affine formulation with edit scoring agrees.
     assert full_dp_matrices(qa, ra, EDIT_DISTANCE).score == -d
+
+
+# ----------------------------------------------------------------------
+# Replicated serving tier (DESIGN.md §11).
+# ----------------------------------------------------------------------
+stream_lengths = st.lists(st.sampled_from([30, 90, 200, 400]),
+                          min_size=1, max_size=24)
+
+
+@settings(max_examples=10, deadline=None)
+@given(lengths=stream_lengths, n_replicas=st.integers(1, 3),
+       seed=st.integers(0, 5))
+def test_router_stream_invariants(lengths, n_replicas, seed):
+    """For ANY ragged stream, replica count, and balancer seed:
+    (1) every accepted request's future resolves exactly once — the
+    aggregate completed counter equals the stream length and every
+    future is done; (2) results are bit-identical to the single-engine
+    oracle (the router only places work — `engine.align` is the same
+    oracle the single-engine service is proven against); (3) per length
+    class, each consecutive slice of `slice_pairs` routing decisions
+    stays on one replica, so no dispatch group ever straddles
+    replicas."""
+    from repro.core import AlignmentEngine
+    from repro.serve import AlignmentRouter
+
+    rng = np.random.default_rng(seed)
+    reads, refs = [], []
+    for L in lengths:
+        read = rng.integers(0, 4, L).astype(np.int8)
+        ref = read.copy()
+        mut = rng.integers(0, L, max(L // 20, 1))
+        ref[mut] = (ref[mut] + 1) % 4
+        reads.append(read)
+        refs.append(ref)
+    oracle = AlignmentEngine(backend="reference", capacity=4).align(
+        reads, refs)
+
+    with AlignmentRouter(n_replicas,
+                         engine_opts=dict(backend="reference", capacity=4),
+                         max_wait_ms=1.0, seed=seed,
+                         trace_routes=True) as router:
+        futs = [router.submit(q, r) for q, r in zip(reads, refs)]
+        results = [f.result(timeout=120) for f in futs]
+        stats = router.stats()
+        trace = list(router.route_trace)
+        slice_pairs = router.slice_pairs
+
+    # (1) exactly-once resolution, nothing lost or double-counted.
+    assert all(f.done() for f in futs)
+    assert stats["submitted"] == len(lengths)
+    assert stats["completed"] == len(lengths)
+    assert stats["routed"] == len(lengths)
+    assert stats["reroutes"] == 0
+
+    # (2) bit-identity with the single-engine oracle.
+    for i, res in enumerate(results):
+        assert int(res["score"]) == int(oracle["score"][i]), i
+        assert int(res["best_score"]) == int(oracle["best_score"][i]), i
+
+    # (3) dispatch slices never straddle replicas.
+    assert len(trace) == len(lengths)  # healthy run: no routing retries
+    per_cls = {}
+    for cls, idx in trace:
+        per_cls.setdefault(cls, []).append(idx)
+    for cls, seq_r in per_cls.items():
+        for k in range(0, len(seq_r), slice_pairs):
+            chunk = seq_r[k:k + slice_pairs]
+            assert len(set(chunk)) == 1, (cls, k, chunk)

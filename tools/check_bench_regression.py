@@ -14,7 +14,11 @@ default) and exits non-zero when:
   ``derived`` string) dropped by more than 0.05 absolute, or its
   ``p99_ms`` grew by more than the threshold — the serving layer's
   wins are batch fill and tail latency, not us_per_call (which for an
-  open-loop row mostly measures the offered arrival schedule).
+  open-loop row mostly measures the offered arrival schedule), or
+* a ``service/router_*`` row's ``scaling`` (the replicated tier's
+  N-replica / 1-replica throughput ratio) dropped by more than 0.3
+  absolute — the scale-out claim's own gate; the fill/p99 rules above
+  apply to router rows too.
 
 Rows are matched on (name, backend); rows present only on one side are
 reported but never fail the check (new benchmarks land with their
@@ -24,6 +28,7 @@ Usage:
     python tools/check_bench_regression.py NEW.json [--baseline REF]
         [--threshold 0.25] [--prefix engine/]
         [--service-prefix service/] [--fill-drop 0.05]
+        [--scaling-drop 0.3]
 
 ``--baseline`` is a git ref:path spec (default HEAD:BENCH_engine.json)
 or a plain file path.
@@ -95,7 +100,7 @@ def check_engine(new: dict, base: dict, *, threshold: float) -> list[str]:
 
 
 def check_service(new: dict, base: dict, *, threshold: float,
-                  fill_drop: float) -> list[str]:
+                  fill_drop: float, scaling_drop: float) -> list[str]:
     failures = []
     for key in sorted(new.keys() | base.keys(), key=str):
         name = f"{key[0]} [{key[1]}]"
@@ -118,6 +123,11 @@ def check_service(new: dict, base: dict, *, threshold: float,
                 problems.append(f"p99_ms {bd['p99_ms']:.2f} -> "
                                 f"{nd['p99_ms']:.2f} "
                                 f"({(ratio - 1) * 100:+.0f}%)")
+        if "scaling" in nd and "scaling" in bd:
+            drop = bd["scaling"] - nd["scaling"]
+            if drop > scaling_drop:
+                problems.append(f"scaling {bd['scaling']:.2f} -> "
+                                f"{nd['scaling']:.2f} (-{drop:.2f})")
         status = "FAIL" if problems else "ok"
         detail = "; ".join(problems) if problems else (
             f"fill={nd.get('fill_ratio', float('nan')):.2f} "
@@ -130,12 +140,13 @@ def check_service(new: dict, base: dict, *, threshold: float,
 
 def check(new_rows: list[dict], base_rows: list[dict], *,
           threshold: float, prefix: str, service_prefix: str,
-          fill_drop: float) -> int:
+          fill_drop: float, scaling_drop: float) -> int:
     failures = check_engine(index(new_rows, prefix),
                             index(base_rows, prefix), threshold=threshold)
     failures += check_service(index(new_rows, service_prefix),
                               index(base_rows, service_prefix),
-                              threshold=threshold, fill_drop=fill_drop)
+                              threshold=threshold, fill_drop=fill_drop,
+                              scaling_drop=scaling_drop)
     if failures:
         print(f"\n{len(failures)} row(s) regressed: {', '.join(failures)}",
               file=sys.stderr)
@@ -156,11 +167,14 @@ def main() -> int:
                     help="row-name prefix under the fill/p99 gate")
     ap.add_argument("--fill-drop", type=float, default=0.05,
                     help="allowed absolute fill_ratio drop for service rows")
+    ap.add_argument("--scaling-drop", type=float, default=0.3,
+                    help="allowed absolute drop of a router row's "
+                         "replica throughput-scaling factor")
     args = ap.parse_args()
     return check(load_rows(args.new), load_rows(args.baseline),
                  threshold=args.threshold, prefix=args.prefix,
                  service_prefix=args.service_prefix,
-                 fill_drop=args.fill_drop)
+                 fill_drop=args.fill_drop, scaling_drop=args.scaling_drop)
 
 
 if __name__ == "__main__":
