@@ -25,6 +25,14 @@ sweep is infeasible in interpret mode on CPU):
                             CIGAR) + decode/fetch/join wall time
   engine/ragged_tb_pipeline multi-class ragged request with CIGAR decode
                             through the async enqueue/finalize pipeline
+  engine/xdrop_reject       seeded 70%-bad-pair candidate mix through
+                            engines with xdrop=100 vs xdrop=None: the
+                            X-drop rule retires every bad pair a small
+                            fraction into its sweep and the backend
+                            skips the remaining step chunks (DESIGN.md
+                            §12); derived records speedup_vs_noxdrop
+                            (CI-gated) and rejected_frac, and survivor
+                            scores are asserted bit-identical first
 
 The trimmed row's `derived` records speedup_vs_untrimmed, the
 tb_fetch_decode row's records tb_bytes_per_pair / pack_ratio, and the
@@ -75,6 +83,44 @@ def _mixed_halflength_pairs(n_pairs: int, seed: int = 61):
         reads.append(read)
         refs.append(ref)
     return reads, refs
+
+
+#: engine/xdrop_reject workload shape: the share of junk candidate pairs
+#: (random vs random — a seeding stage's false positives) and the true
+#: lengths of the two populations. Bad pairs are LONG_BAD so they land in
+#: their own all-bad length class (1024 geometry) and dominate compute —
+#: the regime where retiring them pays; good pairs are short mutated
+#: copies that must come back bit-identical.
+BAD_FRAC, GOOD_L, BAD_L = 0.7, 200, 600
+
+#: Dispatch-slice capacity for the xdrop row. Lockstep batches sweep at
+#: their slowest member's pace, and the retire-step distribution of
+#: random pairs is heavy-tailed (most retire ~150 steps in; a rare
+#: straggler tracks within xdrop of its best for most of the sweep) —
+#: smaller slices localise a straggler to its own slice instead of
+#: holding the whole class live.
+XDROP_CAPACITY = 16
+
+
+def _xdrop_mix(n_pairs: int, seed: int = 71):
+    """Seeded candidate mix: (reads, refs, good_mask)."""
+    rng = np.random.default_rng(seed)
+    reads, refs, good = [], [], []
+    n_bad = int(round(n_pairs * BAD_FRAC))
+    for k in range(n_pairs):
+        if k < n_pairs - n_bad:
+            read = rng.integers(0, 4, GOOD_L).astype(np.int8)
+            ref = read.copy()
+            mut = rng.integers(0, GOOD_L, max(GOOD_L // 20, 1))
+            ref[mut] = (ref[mut] + 1) % 4
+            good.append(True)
+        else:
+            read = rng.integers(0, 4, BAD_L).astype(np.int8)
+            ref = rng.integers(0, 4, BAD_L).astype(np.int8)
+            good.append(False)
+        reads.append(read)
+        refs.append(ref)
+    return reads, refs, np.asarray(good)
 
 
 def _ragged_request(n_pairs: int, seed: int = 67):
@@ -216,3 +262,30 @@ def run(backends=("reference", "pallas"), smoke=False):
              f"roofline_gap={us_pp / bound_us:.1f};"
              f"groups={n_groups};n_pairs={n_pairs};dispatch=persistent",
              backend=backend)
+
+        # X-drop early termination on a seeded bad-candidate mix: the
+        # 70% junk pairs sit alone in the long length class, retire ~1/8
+        # into their sweep, and the backend skips their remaining step
+        # chunks. Survivors are asserted bit-identical before timing.
+        xdrop = 100
+        xreads, xrefs, xgood = _xdrop_mix(n_pairs)
+        eng_nx = AlignmentEngine(backend=backend, sc=MINIMAP2,
+                                 capacity=XDROP_CAPACITY, trim=True)
+        eng_x = AlignmentEngine(backend=backend, sc=MINIMAP2,
+                                capacity=XDROP_CAPACITY, trim=True,
+                                xdrop=xdrop)
+        o_nx = eng_nx.align(xreads, xrefs)
+        o_x = eng_x.align(xreads, xrefs)
+        surv = o_x["status"] == 0
+        assert np.all(o_x["status"][xgood] == 0), "a good pair was retired"
+        for k in ("score", "best_score", "best_i", "best_j"):
+            assert np.array_equal(o_nx[k][surv], o_x[k][surv]), \
+                f"xdrop changed a survivor's {k}"
+        us_x, us_nx = time_host_paired(
+            lambda: eng_x.align(xreads, xrefs),
+            lambda: eng_nx.align(xreads, xrefs), iters)
+        rejected_frac = float((~surv).sum()) / n_pairs
+        emit("engine/xdrop_reject", us_x / n_pairs,
+             f"speedup_vs_noxdrop={us_nx / us_x:.2f};"
+             f"rejected_frac={rejected_frac:.2f};xdrop={xdrop};"
+             f"bad_frac={BAD_FRAC};n_pairs={n_pairs}", backend=backend)

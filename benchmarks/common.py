@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import json
+import platform
 import time
 
 import jax
@@ -10,11 +11,27 @@ import numpy as np
 
 ROWS: list[dict] = []
 
+_HOST_META: dict | None = None
+
+
+def host_meta() -> dict:
+    """Where these numbers were measured: platform, accelerator kind and
+    jax version. Recorded on every row so the regression gate can tell a
+    true perf change from a host change (tools/check_bench_regression
+    warns and skips instead of failing across different hosts)."""
+    global _HOST_META
+    if _HOST_META is None:
+        _HOST_META = {"platform": platform.platform(),
+                      "device_kind": jax.devices()[0].device_kind,
+                      "jax_version": jax.__version__}
+    return _HOST_META
+
 
 def emit(name: str, us_per_call: float, derived: str,
          backend: str | None = None):
     ROWS.append({"name": name, "us_per_call": float(us_per_call),
-                 "derived": derived, "backend": backend})
+                 "derived": derived, "backend": backend,
+                 "host": host_meta()})
     print(f"{name},{us_per_call:.2f},{derived}")
 
 

@@ -6,9 +6,9 @@ executes one padded, single-length-class group. Every backend honours one
 contract (see DESIGN.md §3):
 
     run(q_pad, r_pad, n, m, *, sc, band, adaptive, collect_tb, mode,
-        t_max, decode)
+        t_max, decode, cell_dtype, xdrop)
       -> dict with (N,) int32 'score', 'final_lo', 'best_score',
-         'best_i', 'best_j'; plus, when collect_tb:
+         'best_i', 'best_j', 'status'; plus, when collect_tb:
            decode="host"   -> 'tb' ((N, T, ceil(B/2)) uint8) and 'los'
                               ((N, T+1) int32) — the raw packed planes,
                               for the host decoder / oracle paths;
@@ -20,6 +20,19 @@ contract (see DESIGN.md §3):
                               be fetched.
          T is the static trimmed sweep length t_max (>= max true n + m
          over the batch) or the full padded Lq + Lr when t_max is None.
+
+    ``xdrop`` (int threshold, None = off) enables X-drop early
+    termination: a pair retires the first step its live-band max H falls
+    more than xdrop below the pair's running best. Retired pairs freeze
+    their carry exactly like the t > n + m freeze (so surviving pairs
+    are bit-identical to an xdrop-off run on every backend), report the
+    retiring step in 'status' (0 = aligned, k > 0 = rejected at step k),
+    keep 'score' at the NEG sentinel, and decode to an empty CIGAR.
+    Backends turn the retired mask into real savings: the reference scan
+    becomes a chunked `lax.while_loop` that stops once its (vmapped
+    lockstep) batch is fully retired/finished; the Pallas kernels keep a
+    per-(group, tile) SMEM all-retired flag that short-circuits the
+    remaining step chunks via `pl.when`.
 
 The traceback plane is *packed*: two 4-bit flags per byte, even band
 lane in the low nibble, odd lane in the high nibble; for odd B the last
@@ -42,7 +55,7 @@ Backends additionally provide the persistent-dispatch entry point
 (`AlignmentEngine(dispatch="persistent")`, DESIGN.md §10):
 
     run_persistent(groups, *, sc, adaptive, collect_tb, mode, decode,
-                   cell_dtype)
+                   cell_dtype, xdrop)
       groups: sequence of (q_pad, r_pad, n, m, band, t_max) — one entry
         per dispatch group, each with its own padded geometry, band and
         trimmed sweep. ALL groups execute inside ONE device program

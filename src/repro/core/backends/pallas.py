@@ -37,14 +37,14 @@ class PallasBackend:
 
     def run(self, q_pad, r_pad, n, m, *, sc, band, adaptive=True,
             collect_tb=True, mode="global", t_max=None, decode="host",
-            cell_dtype="int32"):
+            cell_dtype="int32", xdrop=None):
         interpret = (self.interpret if self.interpret is not None
                      else _default_interpret())
         out = banded_align_kernel_batch(
             q_pad, r_pad, n, m, sc=sc, band=band, adaptive=adaptive,
             collect_tb=collect_tb, mode=mode, batch_tile=self.batch_tile,
             chunk=self.chunk, interpret=interpret, t_max=t_max,
-            cell_dtype=cell_dtype)
+            cell_dtype=cell_dtype, xdrop=xdrop)
         if collect_tb and decode == "device":
             # Apply the lockstep walker to the kernel's TBM block: the
             # packed plane stays in device memory and only the RLE CIGAR
@@ -54,7 +54,8 @@ class PallasBackend:
         return out
 
     def run_persistent(self, groups, *, sc, adaptive=True, collect_tb=True,
-                       mode="global", decode="device", cell_dtype="int32"):
+                       mode="global", decode="device", cell_dtype="int32",
+                       xdrop=None):
         """All dispatch groups through ONE megakernel launch (contract in
         `core.backends`). `groups` is a sequence of
         (q_pad, r_pad, n, m, band, t_max) tuples; returns the merged
@@ -71,7 +72,7 @@ class PallasBackend:
              None if t_max is None else int(t_max), int(q.shape[0]))
             for (q, r, n, m, band, t_max) in groups)
         fn = _persistent_program(sc, adaptive, collect_tb, mode, cell_dtype,
-                                 geom, bt, self.chunk, interpret)
+                                 geom, bt, self.chunk, interpret, xdrop)
         return fn(*_stack_groups(groups, geom, bt))
 
 
@@ -103,7 +104,7 @@ def _stack_groups(groups, geom, bt):
 
 @functools.lru_cache(maxsize=128)
 def _persistent_program(sc, adaptive, collect_tb, mode, cell_dtype, geom,
-                        bt, chunk, interpret):
+                        bt, chunk, interpret, xdrop):
     """Build + jit the single-launch megakernel program for one request
     signature. The per-group scalar table (band / live chunk count /
     live tile count) is derived from the static geometry here and closed
@@ -124,7 +125,7 @@ def _persistent_program(sc, adaptive, collect_tb, mode, cell_dtype, geom,
             q_st, r_st, n_st, m_st, band_arr, chunks_arr, ntiles_arr,
             sc=sc, geom=geom, bt=bt, chunk=chunk, adaptive=adaptive,
             collect_tb=collect_tb, mode=mode, interpret=interpret,
-            cell_dtype=cell_dtype)
+            cell_dtype=cell_dtype, xdrop=xdrop)
         merged = []
         nb_max = q_st.shape[1]
         for g, (q_len, r_len, band, t_max, n_pad) in enumerate(geom):

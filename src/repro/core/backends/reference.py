@@ -26,11 +26,12 @@ class ReferenceBackend:
 
     def run(self, q_pad, r_pad, n, m, *, sc, band, adaptive=True,
             collect_tb=True, mode="global", t_max=None, decode="host",
-            cell_dtype="int32"):
+            cell_dtype="int32", xdrop=None):
         out = banded.banded_align_batch(q_pad, r_pad, n, m, sc=sc,
                                         band=band, adaptive=adaptive,
                                         collect_tb=collect_tb, mode=mode,
-                                        t_max=t_max, cell_dtype=cell_dtype)
+                                        t_max=t_max, cell_dtype=cell_dtype,
+                                        xdrop=xdrop)
         if collect_tb and decode == "device":
             # Fuse the lockstep walker onto the scan output: tb/los are
             # consumed while still device values and never reach the host.
@@ -39,7 +40,8 @@ class ReferenceBackend:
         return out
 
     def run_persistent(self, groups, *, sc, adaptive=True, collect_tb=True,
-                       mode="global", decode="device", cell_dtype="int32"):
+                       mode="global", decode="device", cell_dtype="int32",
+                       xdrop=None):
         """All dispatch groups in ONE jit program (see the module doc and
         the contract in `core.backends`). `groups` is a sequence of
         (q_pad, r_pad, n, m, band, t_max) tuples; returns the merged
@@ -55,13 +57,14 @@ class ReferenceBackend:
              None if t_max is None else int(t_max), int(q.shape[0]))
             for (q, r, n, m, band, t_max) in groups)
         fn = _persistent_program(sc, adaptive, collect_tb, mode,
-                                 cell_dtype, geom)
+                                 cell_dtype, geom, xdrop)
         flat = [jnp.asarray(a) for grp in groups for a in grp[:4]]
         return fn(*flat)
 
 
 @functools.lru_cache(maxsize=128)
-def _persistent_program(sc, adaptive, collect_tb, mode, cell_dtype, geom):
+def _persistent_program(sc, adaptive, collect_tb, mode, cell_dtype, geom,
+                        xdrop):
     """Build + jit the chained multi-group program for one request
     signature (per-group shapes/bands/sweeps are static; the cache makes
     repeat requests of the same signature launch with zero retracing)."""
@@ -77,7 +80,7 @@ def _persistent_program(sc, adaptive, collect_tb, mode, cell_dtype, geom):
             o = banded.banded_align_batch(
                 q, r, n, m, sc=sc, band=band, adaptive=adaptive,
                 collect_tb=collect_tb, mode=mode, t_max=t_max,
-                cell_dtype=cell_dtype)
+                cell_dtype=cell_dtype, xdrop=xdrop)
             if collect_tb:
                 o = device_decode_result(o, n, m, band=band, mode=mode)
             outs.append(o)

@@ -42,6 +42,14 @@ from repro.core.scoring import ScoringConfig
 NEG = jnp.int32(-(1 << 28))
 DEAD_THRESHOLD = -(1 << 27)
 
+#: Steps per chunk of the xdrop early-exit sweep (`banded_align` with
+#: ``xdrop`` set runs a `lax.while_loop` over chunks of this many scan
+#: steps so a retired/finished pair stops paying for the rest of its
+#: padded trip count). Matches the Pallas kernels' default step chunk
+#: granularity closely enough that the CPU oracle sees the same
+#: chunk-quantised savings the device does.
+XDROP_CHUNK = 64
+
 # ---------------------------------------------------------------------------
 # Narrow-cell storage (paper §IV: the band-relative score spread is bounded
 # by the band geometry, so 8/16-bit cells suffice — the bit-width reduction
@@ -182,6 +190,9 @@ class BandState(NamedTuple):
     best: jnp.ndarray      # int32 — max H over all visited cells
     best_i: jnp.ndarray    # int32 — its coordinates (extension/local mode:
     best_j: jnp.ndarray    # "traceback starts from the max cell", §III-A2)
+    pair_best: jnp.ndarray   # int32 — running max live-band H (xdrop ref)
+    retired_at: jnp.ndarray  # int32 — 0 = live/aligned; k > 0 = the step
+                             # at which the xdrop rule retired the pair
 
 
 def _shift_down(a, fill):
@@ -207,7 +218,8 @@ def _init_state(band: int, mode: str = "global",
     return BandState(lo=jnp.int32(0), u=z, v=z, x=z, y=z, H=H,
                      base=jnp.int32(0), score=jnp.int32(NEG),
                      final_lo=jnp.int32(0), best=best0,
-                     best_i=jnp.int32(0), best_j=jnp.int32(0))
+                     best_i=jnp.int32(0), best_j=jnp.int32(0),
+                     pair_best=jnp.int32(0), retired_at=jnp.int32(0))
 
 
 def _widen(state: BandState) -> tuple:
@@ -245,12 +257,17 @@ def _narrow(H_new, u_new, v_new, x_new, y_new, cell_dtype: str):
 
 
 def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
-          mode: str, cell_dtype: str, q_pad, r_pad, n, m,
+          mode: str, cell_dtype: str, xdrop: int | None, q_pad, r_pad, n, m,
           state: BandState, t):
     """One wavefront move: decide direction, advance band, update Eq. (4).
 
     The carry may be stored narrow (int8 diffs + int16 relative H); the
     update itself always runs in exact int32 — widen in, narrow out.
+
+    With ``xdrop`` set, a pair retires the first step its live-band max
+    falls more than ``xdrop`` below its running best; a retired pair
+    freezes its carry exactly like the t > n + m freeze, so pairs that
+    never trip the rule are bit-identical to an xdrop-off run.
     """
     o, e = sc.gap_open, sc.gap_extend
     oe = jnp.int32(o + e)
@@ -370,17 +387,39 @@ def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
     x_new = jnp.where(valid, x_new, 0)
     y_new = jnp.where(valid, y_new, 0)
 
-    # ---- 7. Score capture at the global-alignment corner ----
+    # ---- 7. X-drop retire rule + score capture ----
     done = t == (n + m)
+    in_sweep = t <= (n + m)
+    if xdrop is None:
+        # Today's behaviour: only the ragged-length freeze applies.
+        active = in_sweep
+        pair_best = state.pair_best
+        retired_at = state.retired_at
+    else:
+        # Retire when the whole live band fell > xdrop below the pair's
+        # running best (dead cells are NEG, so the band max is over live
+        # cells only). ~done keeps the final corner step eligible for
+        # score capture: a pair never retires on its last diagonal.
+        band_max = jnp.max(H_new)
+        pb_new = jnp.maximum(state.pair_best, band_max)
+        newly = in_sweep & (state.retired_at == 0) & ~done & \
+            (band_max < pb_new - jnp.int32(xdrop))
+        retired_at = jnp.where(newly, t, state.retired_at)
+        active = in_sweep & (retired_at == 0)
+        pair_best = jnp.where(active, pb_new, state.pair_best)
+
     k_corner = jnp.clip(n - lo_new, 0, B - 1)
-    score = jnp.where(done, H_new[k_corner], state.score)
-    final_lo = jnp.where(done, lo_new, state.final_lo)
+    # Gate on active too: a retired pair's recomputed (frozen-carry)
+    # planes must never leak into score capture. With xdrop=None this is
+    # a no-op (done implies active), keeping one code path bit-exact.
+    score = jnp.where(done & active, H_new[k_corner], state.score)
+    final_lo = jnp.where(done & active, lo_new, state.final_lo)
 
     # Extension / local-max tracking (paper §III-A2: local traceback
     # starts from the max-score cell). Only interior cells compete —
     # in semiglobal mode only cells on the last read row (free trailing
     # reference gap: the alignment may end at any window column).
-    elig = interior & (t <= n + m)
+    elig = interior & active
     if mode == "semiglobal":
         elig = elig & (i_vec == n)
     H_masked = jnp.where(elig, H_new, NEG)
@@ -392,9 +431,8 @@ def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
     best_j = jnp.where(better, j_vec[k_best], state.best_j)
 
     # Freeze the carry once past the final diagonal (vmap with ragged
-    # lengths runs extra steps for shorter pairs).
-    active = t <= (n + m)
-
+    # lengths runs extra steps for shorter pairs) — and, under xdrop,
+    # once retired (same freeze, so surviving pairs are unaffected).
     def keep(new, old):
         return jnp.where(active, new, old)
 
@@ -406,18 +444,70 @@ def _step(sc: ScoringConfig, band: int, adaptive: bool, collect_tb: bool,
         y=keep(y_st, state.y), H=keep(H_st, state.H),
         base=keep(base_st, state.base),
         score=score, final_lo=final_lo,
-        best=best, best_i=best_i, best_j=best_j)
+        best=best, best_i=best_i, best_j=best_j,
+        pair_best=pair_best, retired_at=retired_at)
     ys = (code, keep(lo_new, state.lo)) if collect_tb else keep(lo_new, state.lo)
     return new_state, ys
 
 
+def _xdrop_sweep(step, state0: BandState, T: int, band: int,
+                 collect_tb: bool, n, m):
+    """Chunked wavefront sweep for the xdrop path: a `lax.while_loop`
+    over `XDROP_CHUNK`-step scan chunks whose condition drops as soon as
+    the pair is retired or past its true trip count, so the CPU oracle
+    stops paying for the padded sweep exactly like the Pallas kernels'
+    chunk skip. Under vmap the loop runs while ANY batch lane is live
+    and per-lane selects keep finished lanes' carries frozen — savings
+    are per lockstep batch, matching the kernels' per-tile flag.
+
+    Returns (final state, tb[:T] or None, los[:T] or None).
+    """
+    chunk = min(XDROP_CHUNK, T)
+    n_chunks = -(-T // chunk)
+    T_pad = n_chunks * chunk
+
+    def run_chunk(c, state):
+        ts = c * chunk + jnp.arange(1, chunk + 1, dtype=jnp.int32)
+        return jax.lax.scan(step, state, ts)
+
+    def live(c, state):
+        return (c < n_chunks) & (state.retired_at == 0) & \
+            (c * chunk < n + m)
+
+    if collect_tb:
+        tb0 = jnp.zeros((T_pad, packed_tb_width(band)), jnp.uint8)
+        lo0 = jnp.zeros((T_pad,), jnp.int32)
+
+        def body(carry):
+            c, state, tb_buf, lo_buf = carry
+            state, (code, los) = run_chunk(c, state)
+            tb_buf = jax.lax.dynamic_update_slice(tb_buf, code,
+                                                  (c * chunk, 0))
+            lo_buf = jax.lax.dynamic_update_slice(lo_buf, los, (c * chunk,))
+            return c + 1, state, tb_buf, lo_buf
+
+        _, state, tb_buf, lo_buf = jax.lax.while_loop(
+            lambda carry: live(carry[0], carry[1]), body,
+            (jnp.int32(0), state0, tb0, lo0))
+        return state, tb_buf[:T], lo_buf[:T]
+
+    def body(carry):
+        c, state = carry
+        state, _ = run_chunk(c, state)
+        return c + 1, state
+
+    _, state = jax.lax.while_loop(lambda carry: live(*carry), body,
+                                  (jnp.int32(0), state0))
+    return state, None, None
+
+
 @functools.partial(jax.jit, static_argnames=("sc", "band", "adaptive",
                                              "collect_tb", "mode", "t_max",
-                                             "cell_dtype"))
+                                             "cell_dtype", "xdrop"))
 def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
                  adaptive: bool = True, collect_tb: bool = True,
                  mode: str = "global", t_max: int | None = None,
-                 cell_dtype: str = "int32"):
+                 cell_dtype: str = "int32", xdrop: int | None = None):
     """Align one (query, reference) pair with the adaptive banded
     parallelized DP.
 
@@ -440,8 +530,17 @@ def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
         §IV bit-width reduction). Bit-exact with int32 whenever
         `validate_narrow_cells(sc, band)` accepts the config (callers
         should invoke the guard; it is not repeated per trace here).
+      xdrop: X-drop early-exit threshold (static). A pair retires the
+        first step its live-band max H falls more than xdrop below the
+        pair's running best; retired pairs freeze their carry (the same
+        freeze as t > n + m), report 'status' = the retiring step, keep
+        'score' at the NEG sentinel, and — via a chunked
+        `lax.while_loop` sweep — stop paying for the remaining trip
+        count. None (default) = today's full sweep, bit-exact; any
+        surviving pair is bit-identical either way.
 
-    Returns a dict with 'score' (int32), and when collect_tb: 'tb'
+    Returns a dict with 'score' (int32), 'status' (int32: 0 = aligned,
+    k > 0 = retired by xdrop at step k), and when collect_tb: 'tb'
     ((T, ceil(B/2)) uint8 — 4-bit flags packed two lanes per byte, even
     lane in the low nibble; see `pack_tb_lanes`) and 'los' ((T+1,) int32
     band offsets, los[0]=0), where T = t_max or n_pad + m_pad.
@@ -454,14 +553,19 @@ def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
     m = jnp.asarray(m, jnp.int32)
 
     step = functools.partial(_step, sc, band, adaptive, collect_tb, mode,
-                             cell_dtype, q_pad, r_pad, n, m)
-    state, ys = jax.lax.scan(step, _init_state(band, mode, cell_dtype),
-                             jnp.arange(1, T + 1, dtype=jnp.int32))
+                             cell_dtype, xdrop, q_pad, r_pad, n, m)
+    state0 = _init_state(band, mode, cell_dtype)
+    if xdrop is None:
+        state, ys = jax.lax.scan(step, state0,
+                                 jnp.arange(1, T + 1, dtype=jnp.int32))
+        code, los = ys if collect_tb else (None, None)
+    else:
+        state, code, los = _xdrop_sweep(step, state0, T, band, collect_tb,
+                                        n, m)
     out = {"score": state.score, "final_lo": state.final_lo,
            "best_score": state.best, "best_i": state.best_i,
-           "best_j": state.best_j}
+           "best_j": state.best_j, "status": state.retired_at}
     if collect_tb:
-        code, los = ys
         out["tb"] = code
         out["los"] = jnp.concatenate([jnp.zeros((1,), jnp.int32), los])
     return out
@@ -470,11 +574,13 @@ def banded_align(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
 def banded_align_batch(q_batch, r_batch, n_batch, m_batch, *, sc, band,
                        adaptive=True, collect_tb=True, mode="global",
                        t_max: int | None = None,
-                       cell_dtype: str = "int32"):
+                       cell_dtype: str = "int32",
+                       xdrop: int | None = None):
     """Sequence-level parallelism: vmap over a padded batch."""
     fn = functools.partial(banded_align, sc=sc, band=band,
                            adaptive=adaptive, collect_tb=collect_tb,
-                           mode=mode, t_max=t_max, cell_dtype=cell_dtype)
+                           mode=mode, t_max=t_max, cell_dtype=cell_dtype,
+                           xdrop=xdrop)
     return jax.vmap(fn)(q_batch, r_batch, n_batch, m_batch)
 
 

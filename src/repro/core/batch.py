@@ -221,6 +221,17 @@ def enqueue_dispatch(run, q_pad, r_pad, n, m, *, capacity: int):
     return outs
 
 
+def _none_rejected_cigars(merged: dict) -> None:
+    """Replace the CIGAR of every xdrop-retired pair ('status' != 0) with
+    None in place — the walk from a zeroed start cell already produced an
+    empty op list; None is the caller-facing 'rejected' marker."""
+    status = merged.get("status")
+    if status is None:
+        return
+    for i in np.flatnonzero(np.asarray(status)):
+        merged["cigars"][int(i)] = None
+
+
 def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
                       collect_tb: bool = False, mode: str = "global",
                       decode: str = "device", stats: dict | None = None):
@@ -273,6 +284,7 @@ def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
         merged["cigars"] = rle_to_cigars(merged["cig_ops"],
                                          merged["cig_runs"],
                                          merged["cig_len"])
+        _none_rejected_cigars(merged)
         if stats is not None:
             stats["fetched_bytes"] = fetched
         return merged
@@ -284,10 +296,19 @@ def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
         if mode == "semiglobal":
             starts = np.stack([merged["best_i"], merged["best_j"]], axis=1)
         else:
-            starts = None
+            starts = np.stack([np.asarray(n[:num_real], np.int32),
+                               np.asarray(m[:num_real], np.int32)], axis=1)
+        # Retired pairs never completed their sweep, so their flag plane
+        # past the retiring step is frozen-carry garbage: zero their
+        # start cell (an empty walk) and report None, matching the
+        # device decoder's handling.
+        rejected = merged.get("status")
+        if rejected is not None:
+            starts = np.where((rejected != 0)[:, None], 0, starts)
         merged["cigars"] = banded.traceback_banded_batch(
             merged["tb"], merged["los"], n[:num_real], m[:num_real],
             band, starts=starts)
+        _none_rejected_cigars(merged)
     if stats is not None:
         stats["fetched_bytes"] = fetched
     return merged
@@ -296,14 +317,15 @@ def finalize_dispatch(outs, n, m, *, band: int, num_real: int,
 def run_dispatch(bk, q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
                  capacity: int, num_real: int, adaptive: bool = True,
                  collect_tb: bool = False, mode: str = "global",
-                 t_max: int | None = None, decode: str = "device"):
+                 t_max: int | None = None, decode: str = "device",
+                 xdrop: int | None = None):
     """Run one padded single-length-class group through a backend:
     `enqueue_dispatch` + `finalize_dispatch` back to back (the shared
     dispatch core of `align_batch`; the engine's multi-bucket path calls
     the two phases separately to overlap groups)."""
     run = functools.partial(bk.run, sc=sc, band=band, adaptive=adaptive,
                             collect_tb=collect_tb, mode=mode, t_max=t_max,
-                            decode=decode)
+                            decode=decode, xdrop=xdrop)
     outs = enqueue_dispatch(run, q_pad, r_pad, n, m, capacity=capacity)
     return finalize_dispatch(outs, n, m, band=band, num_real=num_real,
                              collect_tb=collect_tb, mode=mode,

@@ -57,7 +57,10 @@ from repro.core.batch import (DEFAULT_BAND_CAP, DEFAULT_BUCKET_EDGES,
 from repro.core.scoring import ScoringConfig, MINIMAP2, adaptive_bandwidth
 
 #: Result keys every backend returns for each pair (original read order).
-SCALAR_KEYS = ("score", "final_lo", "best_score", "best_i", "best_j")
+#: 'status' is the xdrop early-termination verdict: 0 = aligned, k > 0 =
+#: retired at wavefront step k (always 0 when xdrop is off).
+SCALAR_KEYS = ("score", "final_lo", "best_score", "best_i", "best_j",
+               "status")
 
 #: Dummy-row pad multiple for persistent dispatch groups. The pipelined
 #: path pads every group to its capacity slice (64 x num_shards) because
@@ -220,6 +223,15 @@ class AlignmentEngine:
         int32 under the static guard `validate_narrow_cells(sc,
         band_cap)`, which runs at construction and rejects scoring
         configs whose worst case could overflow.
+      xdrop: X-drop early-termination threshold (None = off). When set,
+        a pair retires the first wavefront step its live-band max H
+        falls more than `xdrop` below the pair's running best; its
+        'status' reports the retiring step (0 = aligned), its 'score'
+        stays at the NEG sentinel and its CIGAR entry is None. Surviving
+        pairs are bit-identical to an xdrop-off run (the retire freeze
+        is the same carry freeze the trimmed sweep uses); backends skip
+        the remaining step chunks of fully-retired batches, which is
+        where the wall-clock saving comes from (DESIGN.md §12).
       decode: traceback decode stage for the ragged `align` path.
         "device" (default) fuses the lockstep walker after the compute —
         the packed tb plane never leaves the device and the host fetches
@@ -253,6 +265,7 @@ class AlignmentEngine:
     trim: bool = True
     dispatch: str = "pipelined"
     cell_dtype: str = "int32"
+    xdrop: int | None = None
     decode: str = "device"
     mesh: object = None
     batch_axes: tuple | None = None
@@ -269,6 +282,9 @@ class AlignmentEngine:
         if self.cell_dtype not in ("int32", "narrow"):
             raise ValueError(f"cell_dtype must be 'int32' or 'narrow', "
                              f"got {self.cell_dtype!r}")
+        if self.xdrop is not None and int(self.xdrop) <= 0:
+            raise ValueError(f"xdrop must be a positive threshold or "
+                             f"None, got {self.xdrop!r}")
         if self.cell_dtype == "narrow":
             # Static overflow guard: the band never exceeds band_cap, and
             # the bound is monotonic in the band width, so checking the
@@ -314,7 +330,7 @@ class AlignmentEngine:
         if self.mesh is None:
             raise ValueError("sharded_runner requires AlignmentEngine("
                              "mesh=...)")
-        key = (band, collect_tb, mode, t_max, decode)
+        key = (band, collect_tb, mode, t_max, decode, self.xdrop)
         fn = self._runners.get(key)
         if fn is None:
             import jax
@@ -328,7 +344,8 @@ class AlignmentEngine:
                                         adaptive=self.adaptive,
                                         collect_tb=collect_tb, mode=mode,
                                         t_max=t_max, decode=decode,
-                                        cell_dtype=self.cell_dtype)
+                                        cell_dtype=self.cell_dtype,
+                                        xdrop=self.xdrop)
 
             fn = jax.jit(shard_map(local_align, mesh=self.mesh,
                                    in_specs=(spec, spec, spec, spec),
@@ -366,7 +383,8 @@ class AlignmentEngine:
                                 adaptive=self.adaptive,
                                 collect_tb=collect_tb, mode=mode,
                                 t_max=t_max, decode=decode,
-                                cell_dtype=self.cell_dtype)
+                                cell_dtype=self.cell_dtype,
+                                xdrop=self.xdrop)
 
     # ------------------------------------------------------------------
     # Group-at-a-time pipeline primitives (the service's driving API).
@@ -401,7 +419,7 @@ class AlignmentEngine:
                 self.backend.run, sc=self.sc, band=spec.band,
                 adaptive=self.adaptive, collect_tb=collect_tb,
                 mode=mode, t_max=t_max, decode=self.decode,
-                cell_dtype=self.cell_dtype)
+                cell_dtype=self.cell_dtype, xdrop=self.xdrop)
         outs = enqueue_dispatch(run, q_pad, r_pad, n, m,
                                 capacity=spec.capacity * self.num_shards)
         return PendingDispatch(spec=spec, n=n, m=m, outs=outs,
@@ -458,7 +476,7 @@ class AlignmentEngine:
         outs = self.backend.run_persistent(
             batch, sc=self.sc, adaptive=self.adaptive,
             collect_tb=collect_tb, mode=mode, decode=self.decode,
-            cell_dtype=self.cell_dtype)
+            cell_dtype=self.cell_dtype, xdrop=self.xdrop)
         return PendingPersistent(groups=groups, batch=batch, outs=outs,
                                  num_real=len(reads),
                                  collect_tb=collect_tb, mode=mode)
@@ -503,8 +521,9 @@ class AlignmentEngine:
                 cigs = rle_to_cigars(ops[off:off + n_real],
                                      runs[off:off + n_real],
                                      lens[off:off + n_real])
-                for pos, cig in zip(idx, cigs):
-                    cigars[pos] = cig
+                st = scalars["status"][off:off + n_real]
+                for pos, cig, rej in zip(idx, cigs, st != 0):
+                    cigars[pos] = None if rej else cig
             off += grp[0].shape[0]  # advance past this group's padded rows
         if pending.collect_tb:
             out["cigars"] = cigars

@@ -146,6 +146,11 @@ def device_decode_result(out: dict, n, m, *, band: int,
     Start-cell selection happens on-device: global mode walks from
     (n, m), semiglobal from the tracked best cell on the last read row —
     no host round-trip for ``best_i``/``best_j``.
+
+    Pairs the xdrop rule retired ('status' != 0) never completed their
+    sweep, so their tb plane past the retiring step is frozen-carry
+    garbage: their start cell is zeroed, which makes the lockstep walk a
+    no-op and their CIGAR empty (the engine maps it to None).
     """
     out = dict(out)
     tb = out.pop("tb")
@@ -155,6 +160,11 @@ def device_decode_result(out: dict, n, m, *, band: int,
     else:
         start_i = jnp.asarray(n, jnp.int32)
         start_j = jnp.asarray(m, jnp.int32)
+    status = out.get("status")
+    if status is not None:
+        rejected = status != 0
+        start_i = jnp.where(rejected, 0, start_i)
+        start_j = jnp.where(rejected, 0, start_j)
     ops, runs, lens = decode_packed_tb(tb, los, start_i, start_j, band=band)
     out["cig_ops"] = ops
     out["cig_runs"] = runs

@@ -56,17 +56,21 @@ def _shift_away_lane0(a, fill):
 
 # Column layout of the (bt, STATS_W) stats plane (the per-pair scalar
 # results carried across step chunks and streamed out once at the end).
+# _STATUS: 0 = live/aligned, k > 0 = xdrop-retired at wavefront step k.
+# _PBEST: the pair's running live-band max H (the xdrop reference point).
 STATS_W = 8
 _SCORE, _FINAL_LO, _BEST, _BEST_I, _BEST_J = 0, 1, 2, 3, 4
+_STATUS, _PBEST = 5, 6
 
 
 def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
                       adaptive: bool, bt: int, mode: str, collect_tb: bool,
-                      cell_dtype: str,
+                      cell_dtype: str, xdrop: int | None,
                       # refs
                       q_ref, r_ref, n_ref, m_ref,          # inputs
                       tb_ref, lo_out_ref, stats_ref,        # outputs
-                      u_s, v_s, x_s, y_s, H_s, lo_s, base_s):  # scratch
+                      u_s, v_s, x_s, y_s, H_s, lo_s, base_s,  # scratch
+                      alive_s):  # SMEM all-retired chunk-skip flag
     o, e = sc.gap_open, sc.gap_extend
     oe = jnp.int32(o + e)
     shift = jnp.int32(2 * (o + e))
@@ -91,6 +95,7 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
         stats0 = (jnp.zeros((bt, STATS_W), jnp.int32)
                   .at[:, _SCORE].set(NEG).at[:, _BEST].set(best0))
         stats_ref[...] = stats0
+        alive_s[0] = 1
 
     n = n_ref[...].astype(jnp.int32)  # (bt, 1)
     m = m_ref[...].astype(jnp.int32)
@@ -206,15 +211,39 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
         x_new = jnp.where(valid, x_new, 0)
         y_new = jnp.where(valid, y_new, 0)
 
-        # ---- corner score capture ----
+        # ---- xdrop retire rule + corner score capture ----
         done = t == (n + m)  # (bt,1)
+        in_sweep = t <= (n + m)
+        if xdrop is None:
+            active = in_sweep
+            status_new = stats[:, _STATUS:_STATUS + 1]
+            pbest_new = stats[:, _PBEST:_PBEST + 1]
+        else:
+            # Retire a pair the first step its live-band max H drops more
+            # than xdrop below its running best (dead cells are NEG).
+            # ~done keeps the corner step capturable: a pair never
+            # retires on its final diagonal.
+            band_max = jnp.max(H_new, axis=1, keepdims=True)
+            pb_new = jnp.maximum(stats[:, _PBEST:_PBEST + 1], band_max)
+            status_prev = stats[:, _STATUS:_STATUS + 1]
+            newly = in_sweep & (status_prev == 0) & ~done & \
+                (band_max < pb_new - jnp.int32(xdrop))
+            status_new = jnp.where(newly, t, status_prev)
+            active = in_sweep & (status_new == 0)
+            pbest_new = jnp.where(active, pb_new,
+                                  stats[:, _PBEST:_PBEST + 1])
+
         k_corner = jnp.clip(n - lo_new, 0, B - 1)  # (bt,1)
         h_corner = jnp.take_along_axis(H_new, k_corner, axis=1)
-        score_new = jnp.where(done, h_corner, stats[:, _SCORE:_SCORE + 1])
-        flo_new = jnp.where(done, lo_new, stats[:, _FINAL_LO:_FINAL_LO + 1])
+        # done & active: a retired pair's frozen-carry recompute must not
+        # leak into the capture (no-op when xdrop is None: done => active).
+        score_new = jnp.where(done & active, h_corner,
+                              stats[:, _SCORE:_SCORE + 1])
+        flo_new = jnp.where(done & active, lo_new,
+                            stats[:, _FINAL_LO:_FINAL_LO + 1])
 
         # ---- extension/local best-cell tracking (paper §III-A2) ----
-        elig = interior & (t <= (n + m))
+        elig = interior & active
         if mode == "semiglobal":
             elig = elig & (i_vec == n)
         H_masked = jnp.where(elig, H_new, NEG)
@@ -232,10 +261,9 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
                            stats[:, _BEST_J:_BEST_J + 1])
         stats_new = jnp.concatenate(
             [score_new, flo_new, best_new, bi_new, bj_new,
-             stats[:, _BEST_J + 1:]], axis=1)
+             status_new, pbest_new, stats[:, _PBEST + 1:]], axis=1)
 
-        # ---- carry freeze past the final diagonal ----
-        active = t <= (n + m)
+        # ---- carry freeze past the final diagonal (and once retired) ----
         u = jnp.where(active, u_new, u)
         v = jnp.where(active, v_new, v)
         x = jnp.where(active, x_new, x)
@@ -249,38 +277,54 @@ def _wavefront_kernel(sc: ScoringConfig, band: int, chunk: int,
             lo_out_ref[s] = lo[:, 0]
         return (u, v, x, y, H, lo, stats_new)
 
-    # Widen the (possibly narrow) scratch carry to exact int32 registers
-    # for the step loop; narrow storage only exists at chunk boundaries,
-    # and the base+relative reconstruction is exact, so the loop values
-    # are bit-identical to the int32-scratch kernel.
-    if narrow:
-        H0 = jnp.where(H_s[...] <= jnp.int16(DEAD16), jnp.int32(NEG),
-                       base_s[...] + H_s[...].astype(jnp.int32))
+    def _sweep():
+        # Widen the (possibly narrow) scratch carry to exact int32
+        # registers for the step loop; narrow storage only exists at chunk
+        # boundaries, and the base+relative reconstruction is exact, so
+        # the loop values are bit-identical to the int32-scratch kernel.
+        if narrow:
+            H0 = jnp.where(H_s[...] <= jnp.int16(DEAD16), jnp.int32(NEG),
+                           base_s[...] + H_s[...].astype(jnp.int32))
+        else:
+            H0 = H_s[...]
+        carry = (u_s[...].astype(jnp.int32), v_s[...].astype(jnp.int32),
+                 x_s[...].astype(jnp.int32), y_s[...].astype(jnp.int32),
+                 H0, lo_s[...], stats_ref[...])
+        u, v, x, y, H, lo, stats = jax.lax.fori_loop(0, chunk, step, carry)
+        if narrow:
+            # Re-narrow for the chunk-boundary store: base = max live H
+            # per pair; live cells keep H - base (in [-spread_bound, 0],
+            # proven int16-safe by `validate_narrow_cells`; the DEAD16+1
+            # floor is a never-binding saturation guard). Dead cells ->
+            # DEAD16 sentinel, diffs -> int8 (range [0, M + 2(o+e)]).
+            live = H > DEAD
+            base = jnp.max(jnp.where(live, H, NEG), axis=1, keepdims=True)
+            rel = jnp.maximum(H - base, jnp.int32(DEAD16 + 1))
+            H_s[...] = jnp.where(live, rel,
+                                 jnp.int32(DEAD16)).astype(jnp.int16)
+            base_s[...] = base
+        else:
+            H_s[...] = H
+        u_s[...] = u.astype(cdt)
+        v_s[...] = v.astype(cdt)
+        x_s[...] = x.astype(cdt)
+        y_s[...] = y.astype(cdt)
+        lo_s[...] = lo
+        stats_ref[...] = stats
+        if xdrop is not None:
+            # All-retired/finished chunk skip: once every pair of this
+            # batch tile is either xdrop-retired or past its true trip
+            # count, drop the flag so the remaining step chunks of this
+            # tile short-circuit via the pl.when gate below.
+            t_end = (tblk + 1) * chunk
+            pair_done = (stats[:, _STATUS] != 0) | ((n + m)[:, 0] <= t_end)
+            alive_s[0] = 1 - jnp.all(pair_done).astype(jnp.int32)
+
+    if xdrop is None:
+        _sweep()
     else:
-        H0 = H_s[...]
-    carry = (u_s[...].astype(jnp.int32), v_s[...].astype(jnp.int32),
-             x_s[...].astype(jnp.int32), y_s[...].astype(jnp.int32),
-             H0, lo_s[...], stats_ref[...])
-    u, v, x, y, H, lo, stats = jax.lax.fori_loop(0, chunk, step, carry)
-    if narrow:
-        # Re-narrow for the chunk-boundary store: base = max live H per
-        # pair; live cells keep H - base (in [-spread_bound, 0], proven
-        # int16-safe by `validate_narrow_cells`; the DEAD16+1 floor is a
-        # never-binding saturation guard). Dead cells -> DEAD16 sentinel,
-        # diffs -> int8 (range [0, M + 2(o+e)]).
-        live = H > DEAD
-        base = jnp.max(jnp.where(live, H, NEG), axis=1, keepdims=True)
-        rel = jnp.maximum(H - base, jnp.int32(DEAD16 + 1))
-        H_s[...] = jnp.where(live, rel, jnp.int32(DEAD16)).astype(jnp.int16)
-        base_s[...] = base
-    else:
-        H_s[...] = H
-    u_s[...] = u.astype(cdt)
-    v_s[...] = v.astype(cdt)
-    x_s[...] = x.astype(cdt)
-    y_s[...] = y.astype(cdt)
-    lo_s[...] = lo
-    stats_ref[...] = stats
+        # tblk == 0 OR-arm: the flag is uninitialised before _init ran.
+        pl.when((tblk == 0) | (alive_s[0] != 0))(_sweep)
 
 
 def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
@@ -288,7 +332,8 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
                         mode: str = "global", batch_tile: int = 8,
                         chunk: int = 128, interpret: bool = True,
                         t_max: int | None = None,
-                        cell_dtype: str = "int32"):
+                        cell_dtype: str = "int32",
+                        xdrop: int | None = None):
     """pl.pallas_call wrapper. See ops.banded_align_kernel_batch for the
     public jit'd API (padding, reshaping, traceback plumbing).
 
@@ -312,6 +357,12 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
         scratch bytes per lane so wider bands fit the same VMEM budget.
         The step loop still computes int32 in registers; bit-exact under
         `core.banded.validate_narrow_cells` (callers enforce the guard).
+      xdrop: X-drop early-exit threshold (see `core.banded.banded_align`).
+        Retired pairs freeze their carry and report their retiring step in
+        the 'status' output; once EVERY pair of a batch tile is retired or
+        past its true trip count, an SMEM flag short-circuits the tile's
+        remaining step chunks (`pl.when`), skipping their compute
+        entirely. None = full sweep, bit-exact with today's kernel.
     """
     N, Lq = q_pad.shape
     Lr = r_pad.shape[1]
@@ -324,7 +375,8 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
     n_chunks = T_pad // chunk
 
     kernel = functools.partial(_wavefront_kernel, sc, band, chunk,
-                               adaptive, bt, mode, collect_tb, cell_dtype)
+                               adaptive, bt, mode, collect_tb, cell_dtype,
+                               xdrop)
     grid = (nb, n_chunks)
 
     stats_shape = jax.ShapeDtypeStruct((nb, bt, STATS_W), jnp.int32)
@@ -360,6 +412,7 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
         pltpu.VMEM((bt, band), hdt),        # H (base-relative if narrow)
         pltpu.VMEM((bt, 1), jnp.int32),     # lo
         pltpu.VMEM((bt, 1), jnp.int32),     # base (narrow H offset)
+        pltpu.SMEM((1,), jnp.int32),        # alive (xdrop chunk skip)
     ]
 
     def unsqueeze_kernel(q_r, r_r, n_r, m_r, *rest):
@@ -392,7 +445,7 @@ def banded_align_pallas(q_pad, r_pad, n, m, *, sc: ScoringConfig, band: int,
     stats = outs[-1].reshape(N, STATS_W)
     out = {"score": stats[:, _SCORE], "final_lo": stats[:, _FINAL_LO],
            "best_score": stats[:, _BEST], "best_i": stats[:, _BEST_I],
-           "best_j": stats[:, _BEST_J]}
+           "best_j": stats[:, _BEST_J], "status": stats[:, _STATUS]}
     if collect_tb:
         tb, los = outs[0], outs[1]
         # Reassemble to (N, ...) batch-major layouts matching core.banded.

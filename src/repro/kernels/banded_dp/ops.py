@@ -20,13 +20,15 @@ def banded_align_kernel_batch(q_pad, r_pad, n, m, *, sc: ScoringConfig,
                               batch_tile: int = 8, chunk: int = 128,
                               interpret: bool = True,
                               t_max: int | None = None,
-                              cell_dtype: str = "int32"):
+                              cell_dtype: str = "int32",
+                              xdrop: int | None = None):
     """Kernel-path batched alignment.
 
     Pads the batch up to a multiple of batch_tile with dummy pairs, runs
     the Pallas wavefront, and strips the padding. Returns the same result
     dict as `core.banded.banded_align_batch`: always 'score', 'final_lo',
-    'best_score', 'best_i', 'best_j' (each (N,) int32); with collect_tb
+    'best_score', 'best_i', 'best_j', 'status' (each (N,) int32; status
+    0 = aligned, k > 0 = xdrop-retired at step k); with collect_tb
     also 'tb' ((N, T, ceil(B/2)) uint8 — 4-bit flags packed two lanes per
     byte, `core.banded.pack_tb_lanes` layout) and 'los' ((N, T+1) int32),
     where T = t_max (the trimmed sweep length, >= max true n + m) or
@@ -51,5 +53,5 @@ def banded_align_kernel_batch(q_pad, r_pad, n, m, *, sc: ScoringConfig,
                               adaptive=adaptive, collect_tb=collect_tb,
                               mode=mode, batch_tile=batch_tile,
                               chunk=chunk, interpret=interpret, t_max=t_max,
-                              cell_dtype=cell_dtype)
+                              cell_dtype=cell_dtype, xdrop=xdrop)
     return {k: v[:N] for k, v in out.items()}

@@ -46,19 +46,21 @@ from repro.core.banded import DEAD16, pack_tb_lanes, packed_tb_width
 from repro.core.scoring import ScoringConfig
 from repro.kernels.banded_dp.banded_dp import (DEAD, NEG, STATS_W, _BEST,
                                                _BEST_I, _BEST_J, _FINAL_LO,
-                                               _SCORE, _shift_away_lane0,
+                                               _PBEST, _SCORE, _STATUS,
+                                               _shift_away_lane0,
                                                _shift_toward_lane0)
 
 
 def _persistent_kernel(sc: ScoringConfig, B_max: int, chunk: int,
                        adaptive: bool, bt: int, mode: str, collect_tb: bool,
-                       cell_dtype: str,
+                       cell_dtype: str, xdrop: int | None,
                        # scalar prefetch (the device-side dispatch queue)
                        band_ref, chunks_ref, ntiles_ref,
                        # blocks
                        q_ref, r_ref, n_ref, m_ref,
                        tb_ref, lo_out_ref, stats_ref,
-                       u_s, v_s, x_s, y_s, H_s, lo_s, base_s):
+                       u_s, v_s, x_s, y_s, H_s, lo_s, base_s,
+                       alive_s):  # SMEM all-retired chunk-skip flag
     o, e = sc.gap_open, sc.gap_extend
     oe = jnp.int32(o + e)
     shift = jnp.int32(2 * (o + e))
@@ -70,7 +72,13 @@ def _persistent_kernel(sc: ScoringConfig, B_max: int, chunk: int,
     cblk = pl.program_id(2)
     band_g = band_ref[g]
 
-    @pl.when((pl.program_id(1) < ntiles_ref[g]) & (cblk < chunks_ref[g]))
+    live = (pl.program_id(1) < ntiles_ref[g]) & (cblk < chunks_ref[g])
+    if xdrop is not None:
+        # Per-(group, tile) all-retired chunk skip. The cblk == 0 OR-arm
+        # covers the uninitialised flag before this tile's _init ran.
+        live = live & ((cblk == 0) | (alive_s[0] != 0))
+
+    @pl.when(live)
     def _body():
         @pl.when(cblk == 0)
         def _init():
@@ -87,6 +95,7 @@ def _persistent_kernel(sc: ScoringConfig, B_max: int, chunk: int,
             stats_ref[...] = (
                 jnp.zeros((1, 1, bt, STATS_W), jnp.int32)
                 .at[..., _SCORE].set(NEG).at[..., _BEST].set(best0))
+            alive_s[0] = 1
 
         n = n_ref[0, 0].astype(jnp.int32)  # (bt, 1)
         m = m_ref[0, 0].astype(jnp.int32)
@@ -199,17 +208,36 @@ def _persistent_kernel(sc: ScoringConfig, B_max: int, chunk: int,
             x_new = jnp.where(valid, x_new, 0)
             y_new = jnp.where(valid, y_new, 0)
 
-            # ---- corner score capture ----
+            # ---- xdrop retire rule + corner score capture ----
             done = t == (n + m)
+            in_sweep = t <= (n + m)
+            if xdrop is None:
+                active = in_sweep
+                status_new = stats[:, _STATUS:_STATUS + 1]
+                pbest_new = stats[:, _PBEST:_PBEST + 1]
+            else:
+                # Same rule as the per-group kernel: retire when the live
+                # band max fell > xdrop below the running best; ~done
+                # keeps the corner step capturable.
+                band_max = jnp.max(H_new, axis=1, keepdims=True)
+                pb_new = jnp.maximum(stats[:, _PBEST:_PBEST + 1], band_max)
+                status_prev = stats[:, _STATUS:_STATUS + 1]
+                newly = in_sweep & (status_prev == 0) & ~done & \
+                    (band_max < pb_new - jnp.int32(xdrop))
+                status_new = jnp.where(newly, t, status_prev)
+                active = in_sweep & (status_new == 0)
+                pbest_new = jnp.where(active, pb_new,
+                                      stats[:, _PBEST:_PBEST + 1])
+
             k_corner = jnp.clip(n - lo_new, 0, band_g - 1)
             h_corner = jnp.take_along_axis(H_new, k_corner, axis=1)
-            score_new = jnp.where(done, h_corner,
+            score_new = jnp.where(done & active, h_corner,
                                   stats[:, _SCORE:_SCORE + 1])
-            flo_new = jnp.where(done, lo_new,
+            flo_new = jnp.where(done & active, lo_new,
                                 stats[:, _FINAL_LO:_FINAL_LO + 1])
 
             # ---- best-cell tracking ----
-            elig = interior & (t <= (n + m))
+            elig = interior & active
             if mode == "semiglobal":
                 elig = elig & (i_vec == n)
             H_masked = jnp.where(elig, H_new, NEG)
@@ -228,10 +256,9 @@ def _persistent_kernel(sc: ScoringConfig, B_max: int, chunk: int,
                                stats[:, _BEST_J:_BEST_J + 1])
             stats_new = jnp.concatenate(
                 [score_new, flo_new, best_new, bi_new, bj_new,
-                 stats[:, _BEST_J + 1:]], axis=1)
+                 status_new, pbest_new, stats[:, _PBEST + 1:]], axis=1)
 
-            # ---- carry freeze past the final diagonal ----
-            active = t <= (n + m)
+            # ---- carry freeze past the final diagonal / once retired ----
             u = jnp.where(active, u_new, u)
             v = jnp.where(active, v_new, v)
             x = jnp.where(active, x_new, x)
@@ -268,13 +295,21 @@ def _persistent_kernel(sc: ScoringConfig, B_max: int, chunk: int,
         y_s[...] = y.astype(cdt)
         lo_s[...] = lo
         stats_ref[0, 0] = stats
+        if xdrop is not None:
+            # Drop the flag once every pair of this (group, tile) is
+            # xdrop-retired or past its true trip count: the tile's
+            # remaining step chunks short-circuit via the `live` gate.
+            t_end = (cblk + 1) * chunk
+            pair_done = (stats[:, _STATUS] != 0) | ((n + m)[:, 0] <= t_end)
+            alive_s[0] = 1 - jnp.all(pair_done).astype(jnp.int32)
 
 
 def persistent_align_pallas(q_st, r_st, n_st, m_st, band_arr, chunks_arr,
                             ntiles_arr, *, sc: ScoringConfig, geom: tuple,
                             bt: int, chunk: int, adaptive: bool,
                             collect_tb: bool, mode: str, interpret: bool,
-                            cell_dtype: str = "int32"):
+                            cell_dtype: str = "int32",
+                            xdrop: int | None = None):
     """Run the persistent megakernel over a stacked multi-group request.
 
     Args:
@@ -306,7 +341,8 @@ def persistent_align_pallas(q_st, r_st, n_st, m_st, band_arr, chunks_arr,
     hdt = jnp.int16 if narrow else jnp.int32
 
     kernel = functools.partial(_persistent_kernel, sc, B_max, chunk,
-                               adaptive, bt, mode, collect_tb, cell_dtype)
+                               adaptive, bt, mode, collect_tb, cell_dtype,
+                               xdrop)
     grid = (G, nb_max, n_chunks_max)
     stats_shape = jax.ShapeDtypeStruct((G, nb_max, bt, STATS_W), jnp.int32)
     stats_spec = pl.BlockSpec((1, 1, bt, STATS_W),
@@ -341,6 +377,7 @@ def persistent_align_pallas(q_st, r_st, n_st, m_st, band_arr, chunks_arr,
         pltpu.VMEM((bt, B_max), hdt),       # H (base-relative if narrow)
         pltpu.VMEM((bt, 1), jnp.int32),     # lo
         pltpu.VMEM((bt, 1), jnp.int32),     # base
+        pltpu.SMEM((1,), jnp.int32),        # alive (xdrop chunk skip)
     ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -379,7 +416,7 @@ def persistent_align_pallas(q_st, r_st, n_st, m_st, band_arr, chunks_arr,
         st = stats[gi].reshape(nb_max * bt, STATS_W)[:n_pad]
         out = {"score": st[:, _SCORE], "final_lo": st[:, _FINAL_LO],
                "best_score": st[:, _BEST], "best_i": st[:, _BEST_I],
-               "best_j": st[:, _BEST_J]}
+               "best_j": st[:, _BEST_J], "status": st[:, _STATUS]}
         if collect_tb:
             tb_g = (outs[0][gi].transpose(0, 2, 1, 3)
                     .reshape(nb_max * bt, T_pad_max, Bp)[:n_pad, :T_g])

@@ -10,8 +10,11 @@ from __future__ import annotations
 from repro.core.banded import banded_align_batch
 
 
-def banded_align_ref_batch(q_pad, r_pad, n, m, *, sc, band, adaptive=True):
-    """Reference result dict with 'score', 'tb' (N, T, ceil(B/2) packed),
-    'los' (N, T+1)."""
+def banded_align_ref_batch(q_pad, r_pad, n, m, *, sc, band, adaptive=True,
+                           collect_tb=True):
+    """Reference result dict with 'score' (+ 'tb' (N, T, ceil(B/2)
+    packed) and 'los' (N, T+1) when collect_tb — previously the flag was
+    silently hardcoded to True; score-only oracle calls now skip the
+    traceback plane like the kernel's fast path does)."""
     return banded_align_batch(q_pad, r_pad, n, m, sc=sc, band=band,
-                              adaptive=adaptive, collect_tb=True)
+                              adaptive=adaptive, collect_tb=collect_tb)

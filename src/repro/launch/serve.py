@@ -70,6 +70,12 @@ def main():
                     help="persistent XLA compilation cache directory: a "
                          "restarted replica deserialises its dispatch "
                          "programs instead of recompiling them")
+    ap.add_argument("--xdrop", type=int, default=None,
+                    help="X-drop early-termination threshold: retire a "
+                         "pair once its band max falls this far below "
+                         "its running best (status != 0 in results; the "
+                         "rejected counter / rejected_fraction gauge in "
+                         "the metrics). Default: off")
     ap.add_argument("--no-mesh", action="store_true",
                     help="single-device engine (skip shard_map)")
     ap.add_argument("--replicas", type=int, default=1,
@@ -91,7 +97,7 @@ def main():
     def make_engine(_i=0):
         return AlignmentEngine(
             backend="auto", sc=RAPIDX.scoring, capacity=args.capacity,
-            mesh=mesh, dispatch=args.dispatch,
+            mesh=mesh, dispatch=args.dispatch, xdrop=args.xdrop,
             compilation_cache_dir=args.compilation_cache_dir)
 
     engine = make_engine()
@@ -153,7 +159,8 @@ def main():
     print(f"[serve] p50={stats['p50_ms']:.1f}ms p99={stats['p99_ms']:.1f}ms "
           f"fill_ratio={stats['fill_ratio']:.2f} "
           f"dispatches={stats['dispatches']} "
-          f"bytes_fetched={stats['bytes_fetched']}{tier} "
+          f"bytes_fetched={stats['bytes_fetched']} "
+          f"rejected={stats['rejected']}{tier} "
           f"flushes=fill:{stats['flush_fill']}/timeout:"
           f"{stats['flush_timeout']}/stall:{stats['flush_stall']}")
 

@@ -100,6 +100,15 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
     crosses the memory interface (DESIGN.md §5). Collectives are zero by
     construction (tile independence).
 
+    X-drop-aware trip counting: the record may carry ``reject_fraction``
+    (share of pairs the xdrop rule retires, 0.0 = off) and
+    ``reject_step_frac`` (the mean retiring step as a fraction of the
+    full 2L sweep, default 0.5). The model then charges each pair its
+    *expected surviving steps* — compute and tb traffic scale by
+    ``1 - reject_fraction * (1 - reject_step_frac)`` — and drops the RLE
+    fetch for retired pairs (they return only scalars). Defaults
+    reproduce the xdrop-off numbers exactly.
+
     Dispatch-mode-aware launch charging: the record may carry
     ``dispatch`` ("pipelined"/"persistent"), ``n_groups`` and
     ``cell_dtype``. The pipelined scheduler pays `DISPATCH_OVERHEAD_S`
@@ -120,9 +129,15 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
         chips *= s
     dp = chips  # alignment shards batch over every axis it can
     pairs_dev = batch / min(dp, batch)
-    ops = 2 * L * B_band * 15  # int ops per pair
+    # Expected surviving step fraction under xdrop: a retired pair stops
+    # sweeping (and storing tb) at its retiring step instead of 2L.
+    reject_frac = float(record.get("reject_fraction", 0.0))
+    reject_step_frac = float(record.get("reject_step_frac", 0.5))
+    survive_steps = 1.0 - reject_frac * (1.0 - reject_step_frac)
+    ops = 2 * L * B_band * 15 * survive_steps  # int ops per pair
     flops_dev = pairs_dev * ops
-    tb_bytes = 2 * L * ((B_band + 1) // 2)  # packed tb plane per pair
+    # packed tb plane per pair (expected stored rows under xdrop)
+    tb_bytes = 2 * L * ((B_band + 1) // 2) * survive_steps
     seq_bytes = 2 * L * 4
     # HBM traffic: TBM store by the compute + read-back by the fused
     # decoder (the walk's gathers re-touch at most the plane once).
@@ -131,8 +146,10 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
     # count ~ 2 boundaries per divergence event + 1 (DESIGN.md §4b),
     # over the ~L ops of a near-diagonal alignment path (the path is L
     # ops long, not the 2L wavefront sweeps it takes to compute it).
+    # Retired pairs have no path — they fetch only the scalar row.
     rle_segments = 2 * ALIGN_DIVERGENCE * L + 1
-    host_fetch_bytes = pairs_dev * (5 * rle_segments + 4)
+    host_fetch_bytes = pairs_dev * (
+        5 * rle_segments * (1.0 - reject_frac) + 4)
     terms = roofline_terms(flops_dev, bytes_dev, 0.0, hw)
     dispatch = record.get("dispatch", "pipelined")
     n_groups = int(record.get("n_groups", 1))
@@ -149,6 +166,8 @@ def alignment_roofline(record: dict, hw: Hardware = HW) -> dict:
         "host_fetch_bytes_per_device": host_fetch_bytes,
         "tb_plane_bytes_per_pair": tb_bytes,
         "dispatch": dispatch,
+        "reject_fraction": reject_frac,
+        "surviving_step_fraction": survive_steps,
         "launches": launches,
         "dispatch_overhead_s": dispatch_overhead_s,
         "step_time_total_s": step_time_total_s,

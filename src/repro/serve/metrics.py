@@ -14,6 +14,10 @@ watches to see whether the co-processor is kept fed:
                      finalize (padded slice rows included — the bytes
                      the host really paid for, accumulated per flush,
                      so the counter is strictly monotone in dispatches)
+  rejected           pairs the engine's xdrop rule retired early
+  rejected_fraction  rejected / completed — an operator watching this
+                     gauge sees the candidate-filter quality of the
+                     upstream seeding stage (0.0 when xdrop is off)
   flush_*            flush-cause counters: fill / timeout / stall /
                      priority / shutdown (see serve.policy)
   priority           per-SLA-class sub-dict: completed count and
@@ -63,6 +67,7 @@ class ServiceMetrics:
         self.real_pairs = 0        # true pairs across all dispatches
         self.padded_slots = 0      # padded slots across all dispatches
         self.bytes_fetched = 0     # host bytes materialised by finalize
+        self.rejected = 0          # pairs retired by xdrop (status != 0)
         self.flush_causes = collections.Counter()  # cause -> flushes
         self.completed_by_priority = collections.Counter()
 
@@ -82,14 +87,18 @@ class ServiceMetrics:
             self.padded_slots += num_slots
 
     def record_results(self, latencies_s, nbytes: int,
-                       priorities=None) -> None:
+                       priorities=None, statuses=None) -> None:
         """One finalized group's request latencies and its *actual*
         device->host fetch traffic (padded rows included — accumulated
         per flush, never overwritten). `priorities` optionally labels
-        each latency sample with its request's SLA class."""
+        each latency sample with its request's SLA class; `statuses`
+        optionally carries each request's xdrop verdict (nonzero =
+        retired early, counted into the `rejected` counter)."""
         with self._lock:
             self.completed += len(latencies_s)
             self.bytes_fetched += int(nbytes)
+            if statuses is not None:
+                self.rejected += sum(1 for s in statuses if s)
             self._latencies.extend(latencies_s)
             if priorities is not None:
                 for lat, prio in zip(latencies_s, priorities):
@@ -114,6 +123,7 @@ class ServiceMetrics:
                 "real_pairs": self.real_pairs,
                 "padded_slots": self.padded_slots,
                 "bytes_fetched": self.bytes_fetched,
+                "rejected": self.rejected,
                 "flush_causes": dict(self.flush_causes),
                 "completed_by_priority": dict(self.completed_by_priority),
             }
@@ -136,6 +146,9 @@ def _render(raw: dict) -> dict:
         "real_pairs": raw["real_pairs"],
         "padded_slots": raw["padded_slots"],
         "bytes_fetched": raw["bytes_fetched"],
+        "rejected": raw["rejected"],
+        "rejected_fraction": (raw["rejected"] / raw["completed"]
+                              if raw["completed"] else 0.0),
         "elapsed_s": raw["elapsed_s"],
     }
     for cause in FLUSH_CAUSES:
@@ -177,7 +190,7 @@ def aggregate_metrics(metrics) -> dict:
             for p in PRIORITIES},
     }
     for key in ("submitted", "completed", "dispatches", "real_pairs",
-                "padded_slots", "bytes_fetched"):
+                "padded_slots", "bytes_fetched", "rejected"):
         merged[key] = sum(r[key] for r in raws)
     return _render(merged)
 

@@ -91,6 +91,56 @@ def test_edit_distance_triangle_vs_lengths(q, r):
 
 
 # ----------------------------------------------------------------------
+# X-drop early termination (DESIGN.md §12).
+# ----------------------------------------------------------------------
+#: Fixed length palette so every example reuses the same handful of
+#: compiled dispatch signatures.
+xdrop_lengths = st.lists(st.sampled_from([24, 60, 90]),
+                         min_size=2, max_size=6)
+
+
+@settings(max_examples=5, deadline=None)
+@given(lengths=xdrop_lengths, seed=st.integers(0, 3))
+def test_xdrop_huge_threshold_is_identity(lengths, seed):
+    """A threshold no pair can ever trip (xdrop = 10**6) must be
+    bit-identical to xdrop=None — scores, CIGARs and all-zero statuses —
+    on both backends x both dispatch modes, for ANY mix of real and junk
+    pairs. This pins the retire rule's freeze semantics: the xdrop
+    machinery may only ever *remove* work, never perturb a survivor."""
+    from repro.core import AlignmentEngine
+
+    rng = np.random.default_rng(seed)
+    reads, refs = [], []
+    for L in lengths:
+        read = rng.integers(0, 4, L).astype(np.int8)
+        if rng.random() < 0.5:  # junk pair: random vs random
+            ref = rng.integers(0, 4, L).astype(np.int8)
+        else:                   # real pair: mutated copy
+            ref = read.copy()
+            mut = rng.integers(0, L, max(L // 20, 1))
+            ref[mut] = (ref[mut] + 1) % 4
+        reads.append(read)
+        refs.append(ref)
+
+    for backend, opts in (("reference", {}),
+                          ("pallas", {"interpret": True})):
+        for dispatch in ("pipelined", "persistent"):
+            base = AlignmentEngine(backend=backend, dispatch=dispatch,
+                                   backend_opts=dict(opts), capacity=4)
+            huge = AlignmentEngine(backend=backend, dispatch=dispatch,
+                                   backend_opts=dict(opts), capacity=4,
+                                   xdrop=10**6)
+            ob = base.align(reads, refs, collect_tb=True)
+            oh = huge.align(reads, refs, collect_tb=True)
+            assert np.all(oh["status"] == 0), (backend, dispatch)
+            for key in ("score", "final_lo", "best_score", "best_i",
+                        "best_j", "status"):
+                assert np.array_equal(ob[key], oh[key]), \
+                    (backend, dispatch, key)
+            assert ob["cigars"] == oh["cigars"], (backend, dispatch)
+
+
+# ----------------------------------------------------------------------
 # Replicated serving tier (DESIGN.md §11).
 # ----------------------------------------------------------------------
 stream_lengths = st.lists(st.sampled_from([30, 90, 200, 400]),

@@ -1,0 +1,111 @@
+"""X-drop early termination (DESIGN.md §12).
+
+The contract under test: with `xdrop` set, a hopeless pair retires the
+first wavefront step its live-band max falls more than xdrop below the
+pair's running best — reporting the retiring step in 'status', keeping
+its score at the NEG sentinel, and decoding to CIGAR None — while every
+*surviving* pair is bit-identical to an xdrop-off run (the retire freeze
+is the same carry freeze the trimmed sweep uses). The serving layer
+counts retirements into the `rejected` metrics counter.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import AlignmentEngine
+
+BACKENDS = [("reference", {}), ("pallas", {"interpret": True})]
+DISPATCHES = ["pipelined", "persistent"]
+
+
+def _mixed_group(seed=3, n_good=3, n_bad=4):
+    """Good (mutated-copy) and bad (random-vs-random) pairs in ONE
+    length class, so retirement is per-pair inside a live group."""
+    rng = np.random.default_rng(seed)
+    reads, refs, bad = [], [], []
+    for k in range(n_good + n_bad):
+        L = int(rng.integers(100, 122))
+        read = rng.integers(0, 4, L).astype(np.int8)
+        if k < n_good:
+            ref = read.copy()
+            mut = rng.integers(0, L, max(L // 20, 1))
+            ref[mut] = (ref[mut] + 1) % 4
+            bad.append(False)
+        else:
+            ref = rng.integers(0, 4, L).astype(np.int8)
+            bad.append(True)
+        reads.append(read)
+        refs.append(ref)
+    return reads, refs, np.asarray(bad)
+
+
+@pytest.mark.parametrize("backend,opts", BACKENDS)
+@pytest.mark.parametrize("dispatch", DISPATCHES)
+def test_bad_pairs_retire_good_mates_bit_identical(backend, opts, dispatch):
+    reads, refs, bad = _mixed_group()
+    base = AlignmentEngine(backend=backend, dispatch=dispatch,
+                           backend_opts=dict(opts), capacity=8)
+    xd = AlignmentEngine(backend=backend, dispatch=dispatch,
+                         backend_opts=dict(opts), capacity=8, xdrop=60)
+    ob = base.align(reads, refs, collect_tb=True)
+    ox = xd.align(reads, refs, collect_tb=True)
+
+    # Every bad pair retires strictly BEFORE its sweep would end (the
+    # whole point: the remaining steps are skipped, not computed).
+    sweep = np.array([len(q) + len(r) for q, r in zip(reads, refs)])
+    assert np.all(ox["status"][bad] > 0)
+    assert np.all(ox["status"][bad] < sweep[bad])
+    for i in np.flatnonzero(bad):
+        assert ox["cigars"][i] is None, i
+
+    # Good group-mates are bit-identical to the xdrop-off run.
+    assert np.all(ox["status"][~bad] == 0)
+    for key in ("score", "final_lo", "best_score", "best_i", "best_j"):
+        assert np.array_equal(ox[key][~bad], ob[key][~bad]), key
+    for i in np.flatnonzero(~bad):
+        assert ox["cigars"][i] == ob["cigars"][i], i
+
+    # The xdrop-off run retires nothing, by definition.
+    assert np.all(ob["status"] == 0)
+
+
+def test_xdrop_validation():
+    with pytest.raises(ValueError, match="xdrop"):
+        AlignmentEngine(backend="reference", xdrop=0)
+    with pytest.raises(ValueError, match="xdrop"):
+        AlignmentEngine(backend="reference", xdrop=-5)
+
+
+def test_ref_batch_respects_collect_tb_flag():
+    # Regression: banded_align_ref_batch used to hardcode collect_tb=True.
+    from repro.core import MINIMAP2
+    from repro.kernels.banded_dp.ref import banded_align_ref_batch
+
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 4, (2, 32)).astype(np.int8)
+    r = rng.integers(0, 4, (2, 32)).astype(np.int8)
+    n = m = np.full(2, 32, np.int32)
+    with_tb = banded_align_ref_batch(q, r, n, m, sc=MINIMAP2, band=8)
+    assert "tb" in with_tb and "los" in with_tb
+    without = banded_align_ref_batch(q, r, n, m, sc=MINIMAP2, band=8,
+                                     collect_tb=False)
+    assert "tb" not in without and "los" not in without
+    assert np.array_equal(without["score"], with_tb["score"])
+
+
+def test_service_counts_rejected_pairs():
+    from repro.serve import AlignmentService
+
+    reads, refs, bad = _mixed_group(seed=9)
+    engine = AlignmentEngine(backend="reference", capacity=8, xdrop=60)
+    with AlignmentService(engine, max_wait_ms=1.0) as svc:
+        futs = [svc.submit(q, r) for q, r in zip(reads, refs)]
+        results = [f.result(timeout=120) for f in futs]
+        stats = svc.stats()
+
+    n_bad = int(bad.sum())
+    assert stats["rejected"] == n_bad
+    assert stats["rejected_fraction"] == pytest.approx(
+        n_bad / len(reads))
+    for res, is_bad in zip(results, bad):
+        assert (int(res["status"]) != 0) == bool(is_bad)

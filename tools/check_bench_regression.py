@@ -18,11 +18,20 @@ default) and exits non-zero when:
 * a ``service/router_*`` row's ``scaling`` (the replicated tier's
   N-replica / 1-replica throughput ratio) dropped by more than 0.3
   absolute — the scale-out claim's own gate; the fill/p99 rules above
-  apply to router rows too.
+  apply to router rows too, or
+* an engine row carrying ``speedup_vs_noxdrop`` in its ``derived``
+  (the xdrop early-termination win, engine/xdrop_reject) saw that
+  speedup shrink by more than the relative threshold — the row's
+  us_per_call gate alone would miss a regression that slows the xdrop
+  and no-xdrop paths together.
 
 Rows are matched on (name, backend); rows present only on one side are
 reported but never fail the check (new benchmarks land with their
-first baseline, retired ones leave with their last).
+first baseline, retired ones leave with their last). Rows whose
+recorded ``host`` metadata (platform / device kind / jax version,
+stamped by benchmarks.common.emit) differs between baseline and
+candidate are WARNED and skipped, never failed — cross-host timing
+ratios are not regressions.
 
 Usage:
     python tools/check_bench_regression.py NEW.json [--baseline REF]
@@ -77,6 +86,19 @@ def index(rows: list[dict], prefix: str) -> dict:
             for r in rows if r["name"].startswith(prefix)}
 
 
+def host_mismatch(new_row: dict, base_row: dict) -> str | None:
+    """A human-readable description of how the two rows' recorded hosts
+    differ, or None when they match (or either side predates the host
+    metadata — old baselines stay comparable)."""
+    hn, hb = new_row.get("host"), base_row.get("host")
+    if not hn or not hb or hn == hb:
+        return None
+    diffs = [f"{k}: {hb.get(k)!r} -> {hn.get(k)!r}"
+             for k in sorted(hn.keys() | hb.keys())
+             if hn.get(k) != hb.get(k)]
+    return ", ".join(diffs)
+
+
 def check_engine(new: dict, base: dict, *, threshold: float) -> list[str]:
     failures = []
     for key in sorted(new.keys() | base.keys(), key=str):
@@ -89,12 +111,28 @@ def check_engine(new: dict, base: dict, *, threshold: float) -> list[str]:
             print(f"RETIRED  {name}: baseline "
                   f"{float(base[key]['us_per_call']):.2f} us")
             continue
+        mismatch = host_mismatch(new[key], base[key])
+        if mismatch:
+            print(f"SKIP     {name}: baseline from a different host "
+                  f"({mismatch}) — timings not comparable")
+            continue
         n, b = float(new[key]["us_per_call"]), float(base[key]["us_per_call"])
         ratio = n / b if b else 1.0
-        status = "FAIL" if ratio > 1.0 + threshold else "ok"
-        print(f"{status:8} {name}: {b:.2f} -> {n:.2f} us "
-              f"({(ratio - 1) * 100:+.1f}%)")
-        if status == "FAIL":
+        problems = []
+        if ratio > 1.0 + threshold:
+            problems.append(f"{b:.2f} -> {n:.2f} us "
+                            f"({(ratio - 1) * 100:+.1f}%)")
+        nd, bd = parse_derived(new[key]), parse_derived(base[key])
+        if "speedup_vs_noxdrop" in nd and "speedup_vs_noxdrop" in bd:
+            sp_n, sp_b = nd["speedup_vs_noxdrop"], bd["speedup_vs_noxdrop"]
+            if sp_b and sp_n < sp_b * (1.0 - threshold):
+                problems.append(f"speedup_vs_noxdrop {sp_b:.2f} -> "
+                                f"{sp_n:.2f}")
+        status = "FAIL" if problems else "ok"
+        detail = "; ".join(problems) if problems else (
+            f"{b:.2f} -> {n:.2f} us ({(ratio - 1) * 100:+.1f}%)")
+        print(f"{status:8} {name}: {detail}")
+        if problems:
             failures.append(name)
     return failures
 
@@ -109,6 +147,11 @@ def check_service(new: dict, base: dict, *, threshold: float,
             continue
         if key not in new:
             print(f"RETIRED  {name}")
+            continue
+        mismatch = host_mismatch(new[key], base[key])
+        if mismatch:
+            print(f"SKIP     {name}: baseline from a different host "
+                  f"({mismatch}) — timings not comparable")
             continue
         nd, bd = parse_derived(new[key]), parse_derived(base[key])
         problems = []
