@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig14    — edit distance w/ and w/o traceback       (paper Fig. 14)
   engine   — engine dispatch-pipeline throughput      (trimming win)
   engine_service — streaming AlignmentService sweep   (open-loop serving)
+  engine_mapper  — end-to-end read mapping            (seed -> chain -> align)
   roofline — per-cell roofline terms from the dry-run (EXPERIMENTS §Roofline)
 
 Usage: PYTHONPATH=src python -m benchmarks.run
@@ -36,8 +37,9 @@ import traceback
 from benchmarks import (bench_engine_throughput, bench_fig9_fig10_dse,
                         bench_fig11_pim_model, bench_fig12_short_reads,
                         bench_fig13_long_reads, bench_fig14_edit_distance,
-                        bench_roofline, bench_service_throughput,
-                        bench_table1_complexity, bench_table5_accuracy)
+                        bench_mapper_throughput, bench_roofline,
+                        bench_service_throughput, bench_table1_complexity,
+                        bench_table5_accuracy)
 from benchmarks.common import header, write_json
 
 MODULES = [
@@ -49,9 +51,11 @@ MODULES = [
     ("fig13", bench_fig13_long_reads),
     ("fig14", bench_fig14_edit_distance),
     ("engine", bench_engine_throughput),
-    # "engine_service" so CI's `--only engine` records the service rows
-    # into BENCH_engine.json alongside the engine pipeline rows.
+    # "engine_service" / "engine_mapper" so CI's `--only engine` records
+    # the service and read-mapping rows into BENCH_engine.json alongside
+    # the engine pipeline rows.
     ("engine_service", bench_service_throughput),
+    ("engine_mapper", bench_mapper_throughput),
     ("roofline", bench_roofline),
 ]
 

@@ -1,0 +1,21 @@
+"""Read-mapping front end: seed -> chain -> align (DESIGN.md §13).
+
+The pipeline half the paper places *in front of* the accelerator
+(Fig. 2(a)): `map.index` is the (k, w)-minimizer reference index with
+occurrence-capped hot k-mers, `map.chain` the jit'd minimap2-style
+anchor chaining, and `map.ReadMapper` the front end that turns chains
+into banded semiglobal requests against a `serve.AlignmentService` (or
+`AlignmentRouter`) and reports per-read loci with best-vs-second-best
+mapping quality. Ground-truth accuracy is proven against
+`data.genome.ReadSimulator`'s truth labels in tests/test_mapper.py.
+"""
+
+from repro.map.chain import Chain, ChainParams, chain_batch, top_chains
+from repro.map.index import LookupResult, MinimizerIndex, minimizers
+from repro.map.mapper import (MapResult, ReadMapper, STATUS_MAPPED,
+                              STATUS_SEED_CAPPED, STATUS_UNMAPPED)
+
+__all__ = ["MinimizerIndex", "LookupResult", "minimizers",
+           "Chain", "ChainParams", "chain_batch", "top_chains",
+           "ReadMapper", "MapResult", "STATUS_MAPPED", "STATUS_UNMAPPED",
+           "STATUS_SEED_CAPPED"]

@@ -1,0 +1,45 @@
+"""Tiny O(n^2) numpy reference chainer — the oracle for repro.map.chain.
+
+Mirrors the jit'd DP's semantics exactly (same integer gap cost, same
+strict-extension/tie rule, same NEG sentinel) but written as the obvious
+double loop, so a disagreement implicates the vectorised/jit version.
+Shared by tests/test_mapper.py (golden + random cases) and the
+hypothesis property in tests/test_property_ranges.py.
+"""
+
+import numpy as np
+
+NEG = -(2 ** 30)
+
+
+def gap_cost_py(dd: int, k: int) -> int:
+    """Integer minimap2-style cost: dd*k//100 + floor(log2(dd+1))//2."""
+    return (dd * k) // 100 + (((dd + 1).bit_length() - 1) // 2)
+
+
+def chain_oracle(q_pos, r_pos, *, k: int, max_gap: int = 5000,
+                 max_diag_diff: int = 500):
+    """(f, pred) for anchors sorted by (r_pos, q_pos) — the plain
+    O(n^2) rendering of repro.map.chain's recurrence."""
+    q_pos = np.asarray(q_pos, np.int64)
+    r_pos = np.asarray(r_pos, np.int64)
+    A = q_pos.size
+    f = np.full(A, NEG, np.int64)
+    pred = np.full(A, -1, np.int64)
+    for i in range(A):
+        best, best_j = NEG, -1
+        for j in range(i):
+            dq = int(q_pos[i] - q_pos[j])
+            dr = int(r_pos[i] - r_pos[j])
+            dd = abs(dr - dq)
+            if dq <= 0 or dr <= 0 or dq > max_gap or dr > max_gap \
+                    or dd > max_diag_diff:
+                continue
+            cand = int(f[j]) + min(dq, dr, k) - gap_cost_py(dd, k)
+            if cand > best:
+                best, best_j = cand, j
+        if best > k:  # strict: ties start a fresh chain
+            f[i], pred[i] = best, best_j
+        else:
+            f[i], pred[i] = k, -1
+    return f, pred

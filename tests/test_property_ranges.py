@@ -206,3 +206,79 @@ def test_router_stream_invariants(lengths, n_replicas, seed):
         for k in range(0, len(seq_r), slice_pairs):
             chunk = seq_r[k:k + slice_pairs]
             assert len(set(chunk)) == 1, (cls, k, chunk)
+
+
+# ----------------------------------------------------------------------
+# Read-mapping front end (DESIGN.md §13).
+# ----------------------------------------------------------------------
+dna = st.lists(st.integers(0, 3), min_size=1, max_size=200)
+
+
+@settings(max_examples=60, deadline=None)
+@given(bases=dna, k=st.integers(2, 12), w=st.integers(1, 8))
+def test_minimizer_invariants(bases, k, w):
+    """For ANY sequence and (k, w): every selected minimizer is a true
+    substring occurrence of its k-mer, positions are strictly
+    increasing, and consecutive selections are never more than w apart
+    (window coverage — the guarantee seeding recall rests on)."""
+    from repro.map.index import encode_kmers, minimizers
+
+    seq = np.array(bases, np.int8)
+    vals, pos = minimizers(seq, k, w)
+    if seq.size < k:
+        assert pos.size == 0
+        return
+    kmers = encode_kmers(seq, k)
+    assert pos.size > 0
+    assert np.array_equal(vals, kmers[pos])
+    assert np.all(np.diff(pos) > 0)
+    assert pos[0] < w and np.all(np.diff(pos) <= w)
+    assert pos[-1] >= kmers.size - w
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_true_substring_reads_always_seed_or_flag(data):
+    """A read cut verbatim from the genome ALWAYS either yields anchors
+    or reports capped > 0 — the occurrence cap may withhold hot seeds
+    but may never silently lose a read's only seed."""
+    from repro.map import MinimizerIndex
+
+    genome = np.array(data.draw(st.lists(st.integers(0, 3),
+                                         min_size=40, max_size=400)),
+                      np.int8)
+    k = data.draw(st.integers(3, 8))
+    w = data.draw(st.integers(1, 6))
+    max_occ = data.draw(st.integers(1, 8))
+    read_len = data.draw(st.integers(k + w, min(genome.size, 64)))
+    lo = data.draw(st.integers(0, genome.size - read_len))
+    idx = MinimizerIndex(genome, k=k, w=w, max_occ=max_occ)
+    hit = idx.lookup(genome[lo:lo + read_len].copy())
+    assert hit.total > 0
+    assert hit.q_pos.size > 0 or hit.capped > 0
+    # Every returned anchor is an exact k-mer match.
+    for q, r in zip(hit.q_pos, hit.r_pos):
+        assert np.array_equal(genome[lo + q:lo + q + k],
+                              genome[r:r + k])
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_chain_scores_match_oracle(data):
+    """The jit'd chain DP computes EXACTLY the O(n^2) numpy oracle's
+    scores and predecessors for ANY sorted anchor set."""
+    from mapper_oracle import chain_oracle
+    from repro.map import ChainParams, chain_batch
+
+    a = data.draw(st.integers(1, 24))
+    q = np.sort(np.array(data.draw(st.lists(
+        st.integers(0, 250), min_size=a, max_size=a)), np.int64))
+    r = np.sort(np.array(data.draw(st.lists(
+        st.integers(0, 1500), min_size=a, max_size=a)), np.int64))
+    order = np.lexsort((q, r))
+    q, r = q[order], r[order]
+    k = data.draw(st.integers(5, 19))
+    [(f, pred, _, _)] = chain_batch([(q, r)], ChainParams(k=k))
+    f_ref, pred_ref = chain_oracle(q, r, k=k)
+    assert np.array_equal(f[:a], f_ref)
+    assert np.array_equal(pred[:a], pred_ref)

@@ -23,7 +23,14 @@ default) and exits non-zero when:
   (the xdrop early-termination win, engine/xdrop_reject) saw that
   speedup shrink by more than the relative threshold — the row's
   us_per_call gate alone would miss a regression that slows the xdrop
-  and no-xdrop paths together.
+  and no-xdrop paths together, or
+* a ``mapper/*`` row (the end-to-end read-mapping pipeline,
+  bench_mapper_throughput) got slower per read by more than the
+  threshold, or its ground-truth ``recall`` dropped by more than 0.005
+  absolute. Recall is deterministic in the recorded traffic seed, so
+  unlike the timing gates it is enforced even across host changes — a
+  mapper that mapped 99.6% of reads yesterday and 99.0% today is wrong
+  on any machine.
 
 Rows are matched on (name, backend); rows present only on one side are
 reported but never fail the check (new benchmarks land with their
@@ -37,7 +44,8 @@ Usage:
     python tools/check_bench_regression.py NEW.json [--baseline REF]
         [--threshold 0.25] [--prefix engine/]
         [--service-prefix service/] [--fill-drop 0.05]
-        [--scaling-drop 0.3]
+        [--scaling-drop 0.3] [--mapper-prefix mapper/]
+        [--recall-drop 0.005]
 
 ``--baseline`` is a git ref:path spec (default HEAD:BENCH_engine.json)
 or a plain file path.
@@ -181,15 +189,64 @@ def check_service(new: dict, base: dict, *, threshold: float,
     return failures
 
 
+def check_mapper(new: dict, base: dict, *, threshold: float,
+                 recall_drop: float) -> list[str]:
+    """mapper/* rows: per-read latency under the relative threshold,
+    ground-truth recall under an absolute floor. The recall gate runs
+    even across host changes — the traffic is seed-deterministic, so a
+    recall drop is an accuracy bug, not noise."""
+    failures = []
+    for key in sorted(new.keys() | base.keys(), key=str):
+        name = f"{key[0]} [{key[1]}]"
+        if key not in base:
+            print(f"NEW      {name} (no baseline)")
+            continue
+        if key not in new:
+            print(f"RETIRED  {name}")
+            continue
+        nd, bd = parse_derived(new[key]), parse_derived(base[key])
+        problems = []
+        if "recall" in nd and "recall" in bd:
+            drop = bd["recall"] - nd["recall"]
+            if drop > recall_drop:
+                problems.append(f"recall {bd['recall']:.4f} -> "
+                                f"{nd['recall']:.4f} (-{drop:.4f})")
+        mismatch = host_mismatch(new[key], base[key])
+        if mismatch and not problems:
+            print(f"SKIP     {name}: recall ok; baseline from a "
+                  f"different host ({mismatch}) — timings not comparable")
+            continue
+        if not mismatch:
+            n = float(new[key]["us_per_call"])
+            b = float(base[key]["us_per_call"])
+            ratio = n / b if b else 1.0
+            if ratio > 1.0 + threshold:
+                problems.append(f"{b:.2f} -> {n:.2f} us/read "
+                                f"({(ratio - 1) * 100:+.1f}%)")
+        status = "FAIL" if problems else "ok"
+        detail = "; ".join(problems) if problems else (
+            f"recall={nd.get('recall', float('nan')):.4f} "
+            f"reads_per_s={nd.get('reads_per_s', float('nan')):.1f}")
+        print(f"{status:8} {name}: {detail}")
+        if problems:
+            failures.append(name)
+    return failures
+
+
 def check(new_rows: list[dict], base_rows: list[dict], *,
           threshold: float, prefix: str, service_prefix: str,
-          fill_drop: float, scaling_drop: float) -> int:
+          fill_drop: float, scaling_drop: float,
+          mapper_prefix: str = "mapper/",
+          recall_drop: float = 0.005) -> int:
     failures = check_engine(index(new_rows, prefix),
                             index(base_rows, prefix), threshold=threshold)
     failures += check_service(index(new_rows, service_prefix),
                               index(base_rows, service_prefix),
                               threshold=threshold, fill_drop=fill_drop,
                               scaling_drop=scaling_drop)
+    failures += check_mapper(index(new_rows, mapper_prefix),
+                             index(base_rows, mapper_prefix),
+                             threshold=threshold, recall_drop=recall_drop)
     if failures:
         print(f"\n{len(failures)} row(s) regressed: {', '.join(failures)}",
               file=sys.stderr)
@@ -213,11 +270,18 @@ def main() -> int:
     ap.add_argument("--scaling-drop", type=float, default=0.3,
                     help="allowed absolute drop of a router row's "
                          "replica throughput-scaling factor")
+    ap.add_argument("--mapper-prefix", default="mapper/",
+                    help="row-name prefix under the reads/s + recall gate")
+    ap.add_argument("--recall-drop", type=float, default=0.005,
+                    help="allowed absolute ground-truth recall drop for "
+                         "mapper rows (enforced across hosts)")
     args = ap.parse_args()
     return check(load_rows(args.new), load_rows(args.baseline),
                  threshold=args.threshold, prefix=args.prefix,
                  service_prefix=args.service_prefix,
-                 fill_drop=args.fill_drop, scaling_drop=args.scaling_drop)
+                 fill_drop=args.fill_drop, scaling_drop=args.scaling_drop,
+                 mapper_prefix=args.mapper_prefix,
+                 recall_drop=args.recall_drop)
 
 
 if __name__ == "__main__":
